@@ -1,0 +1,56 @@
+"""Shared benchmark scaffolding: cost-model calibration, CSV emission.
+
+Every ``fig*_`` module reproduces one paper figure/table; ``run.py``
+executes them all and prints ``name,us_per_call,derived`` CSV rows plus
+figure-level derived metrics (the numbers the paper reports).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.core.simulation import (CLOUD_CLUSTER, LOCAL_CLUSTER, CostModel,
+                                   calibrate_row_cost)
+
+_ROW_COST = None
+
+
+def calibrated_local() -> CostModel:
+    """LOCAL_CLUSTER with the row cost measured on this host."""
+    global _ROW_COST
+    if _ROW_COST is None:
+        _ROW_COST = calibrate_row_cost()
+    return dataclasses.replace(LOCAL_CLUSTER, row_cost=_ROW_COST)
+
+
+def calibrated_cloud() -> CostModel:
+    global _ROW_COST
+    if _ROW_COST is None:
+        _ROW_COST = calibrate_row_cost()
+    # shared droplets: ~1 vCPU t2.micro-class, ~16× slower than this host's
+    # vectorized matmul — matches the paper's seconds-per-iteration regime
+    # where compute dominates comm/decode (§7.1)
+    return dataclasses.replace(CLOUD_CLUSTER, row_cost=_ROW_COST * 16)
+
+
+def time_call(fn: Callable, *args, repeats: int = 3, **kw) -> float:
+    """Best-of-N wall time in microseconds."""
+    best = np.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+class Csv:
+    def __init__(self):
+        self.rows: List[str] = []
+
+    def add(self, name: str, us_per_call: float, derived: str = "") -> None:
+        self.rows.append(f"{name},{us_per_call:.2f},{derived}")
+        print(f"{name},{us_per_call:.2f},{derived}", flush=True)

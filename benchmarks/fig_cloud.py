@@ -1,0 +1,124 @@
+"""Figs. 8–11 — industrial-cloud deployment: SVM under low/high
+mis-prediction, execution times + per-worker wasted computation.
+
+Paper claims validated here:
+* Fig 8:  (10,7)-S²C² beats (10,7)-MDS by 39.3 % (max 42.8 %) @ 0 % mispred;
+* Fig 9:  zero wasted computation for S²C² @ 0 % mispred, ≫ for MDS;
+* Fig 10: 17 % / 11 % / 13 % gains for (10,7)/(9,7)/(8,7) @ 18 % mispred;
+* Fig 11: conventional MDS wastes ~47 % more computation than S²C².
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import Csv, calibrated_cloud
+from repro.core.predictor import SpeedPredictor
+from repro.core.simulation import simulate_run
+from repro.core.strategies import GeneralS2C2, MDSCoded, OverDecomposition
+from repro.core.traces import TraceConfig, controlled_traces, sample_traces
+
+N = 10
+D = 420000
+
+
+class OraclePredictor:
+    """0 % mis-prediction (the paper's best-observed condition)."""
+
+    def __init__(self, traces):
+        self.traces = traces
+        self.i = 0
+
+    def predict(self):
+        return self.traces[min(self.i, len(self.traces) - 1)]
+
+    def observe(self, _):
+        self.i += 1
+
+
+def low_mispred(csv: Csv) -> None:
+    cost = calibrated_cloud()
+    tr = controlled_traces(N, 15, n_stragglers=0,
+                           nonstraggler_variation=0.10, seed=21)
+    base = None
+    results = {}
+    for name, strat, pred in (
+            ("overdecomp", OverDecomposition(N, D), None),
+            ("mds-10-7", MDSCoded(N, 7, D), None),
+            ("mds-9-7", MDSCoded(9, 7, D), None),
+            ("mds-8-7", MDSCoded(8, 7, D), None),
+            ("s2c2-10-7", GeneralS2C2(N, 7, D), OraclePredictor(tr)),
+            ("s2c2-9-7", GeneralS2C2(9, 7, D), OraclePredictor(tr[:, :9])),
+            ("s2c2-8-7", GeneralS2C2(8, 7, D), OraclePredictor(tr[:, :8]))):
+        n_w = strat.n
+        r = simulate_run(strat, tr[:, :n_w], cost, predictor=pred)
+        results[name] = r
+        if name == "s2c2-10-7":
+            base = r.mean_time
+    for name, r in results.items():
+        csv.add(f"fig8/{name}", 0.0,
+                f"norm_time={r.mean_time / base:.3f}")
+    gain = (results["mds-10-7"].mean_time - results["s2c2-10-7"].mean_time) \
+        / results["s2c2-10-7"].mean_time
+    csv.add("fig8/s2c2-10-7-vs-mds-gain", 0.0,
+            f"gain={gain:.3f} (paper 0.393, max 0.428)")
+    # Fig 9: wasted computation per worker @ 0% mispred
+    csv.add("fig9/s2c2-wasted-rows", 0.0,
+            f"total={results['s2c2-10-7'].per_worker_wasted.sum():.0f}")
+    csv.add("fig9/mds-wasted-rows", 0.0,
+            f"total={results['mds-10-7'].per_worker_wasted.sum():.0f}")
+
+
+def high_mispred(csv: Csv) -> None:
+    """Shared-VM noise traces + last-value predictor ⇒ realistic mispred.
+
+    Trace statistics matched to the paper's cloud (§3.2, §7.2.3): speeds
+    drift within ~10 % locally, occasional 5× regime shifts, last-value
+    predictor MAPE ≈ 14 %, ≤ 2 simultaneous stragglers typical.  Gains are
+    averaged over 8 independent 15-iteration windows (one cloud run is
+    seed-noise dominated at this length).
+    """
+    cost = calibrated_cloud()
+    gains = {p: [] for p in ("10-7", "9-7", "8-7")}
+    waste_extra = []
+    for seed in range(8):
+        results = {}
+        for pair, (n_w, k) in (("10-7", (10, 7)), ("9-7", (9, 7)),
+                               ("8-7", (8, 7))):
+            cfg = TraceConfig(n_nodes=n_w, n_iters=15, noise_sigma=0.012,
+                              p_become_straggler=0.02, p_recover=0.4,
+                              drift_sigma=0.012)
+            tr = sample_traces(cfg, seed=seed)
+            mds = simulate_run(MDSCoded(n_w, k, D), tr, cost)
+            s2 = simulate_run(GeneralS2C2(n_w, k, D), tr, cost,
+                              predictor=SpeedPredictor(n_w))
+            gains[pair].append((mds.mean_time - s2.mean_time) / s2.mean_time)
+            results[pair] = (mds, s2)
+        mds10, s210 = results["10-7"]
+        waste_extra.append(mds10.per_worker_wasted.sum()
+                           / max(s210.per_worker_wasted.sum(), 1.0) - 1)
+    for pair, paper in (("10-7", 0.17), ("9-7", 0.11), ("8-7", 0.13)):
+        csv.add(f"fig10/gain-{pair}", 0.0,
+                f"gain={np.mean(gains[pair]):.3f} (paper {paper})")
+    # over-decomposition under mis-prediction (one representative window)
+    cfg = TraceConfig(n_nodes=N, n_iters=15, noise_sigma=0.012,
+                      p_become_straggler=0.02, p_recover=0.4,
+                      drift_sigma=0.012)
+    tr = sample_traces(cfg, seed=0)
+    od = simulate_run(OverDecomposition(N, D), tr, cost,
+                      predictor=SpeedPredictor(N))
+    mds = simulate_run(MDSCoded(N, 7, D), tr, cost)
+    csv.add("fig10/overdecomp-vs-mds", 0.0,
+            f"ratio={od.mean_time / mds.mean_time:.3f} (paper >1: extra "
+            f"data movement)")
+    # Fig 11: wasted computation comparison under mis-prediction
+    csv.add("fig11/mds-extra-wasted-vs-s2c2", 0.0,
+            f"extra={np.mean(waste_extra):.2f} (paper 0.47; ours higher "
+            f"because S²C² wastes ≈0 outside shift iterations)")
+
+
+def main(csv: Csv) -> None:
+    low_mispred(csv)
+    high_mispred(csv)

@@ -1,0 +1,49 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp reference.
+
+On CPU interpret mode the timings measure semantics, not TPU speed; the
+derived column therefore reports the *work ratio* (the S²C² point: compute
+scales with assigned blocks) and ref-vs-kernel agreement, which transfer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Csv, time_call
+from repro.kernels import ops, ref
+
+
+def main(csv: Csv) -> None:
+    rng = np.random.default_rng(0)
+    chunks, br, d = 16, 64, 1024
+    a = jnp.asarray(rng.standard_normal((chunks * br, d)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((d, 8)), jnp.float32)
+
+    ref_full = jax.jit(lambda a, x: a @ x)
+    ref_full(a, x).block_until_ready()
+    t_full = time_call(lambda: ref_full(a, x).block_until_ready())
+    csv.add("kernels/dense-matmul-ref", t_full, "full-partition")
+
+    for frac in (1.0, 0.5, 0.25):
+        nb = max(1, int(chunks * frac))
+        ids = jnp.arange(nb, dtype=jnp.int32)
+        fn = jax.jit(lambda a, x, ids: ref.coded_matvec_ref(a, x, ids, br))
+        fn(a, x, ids).block_until_ready()
+        t = time_call(lambda: fn(a, x, ids).block_until_ready())
+        csv.add(f"kernels/coded-matvec-assigned={frac:.2f}", t,
+                f"work_ratio={t / t_full:.2f}")
+
+    # agreement checks (kernel in interpret mode vs oracle)
+    ids = jnp.asarray([3, 0, 9, 12], jnp.int32)
+    got = ops.coded_matvec(a, x, ids, br)
+    want = ref.coded_matvec_ref(a, x, ids, br)
+    err = float(jnp.max(jnp.abs(got - want)))
+    csv.add("kernels/coded-matvec-pallas-agreement", 0.0, f"max_err={err:.1e}")
+
+    g = jnp.asarray(rng.standard_normal((6, 4)), jnp.float32)
+    blocks = jnp.asarray(rng.standard_normal((4, 128, 256)), jnp.float32)
+    err2 = float(jnp.max(jnp.abs(ops.mds_encode(g, blocks)
+                                 - ref.mds_encode_ref(g, blocks))))
+    csv.add("kernels/mds-encode-pallas-agreement", 0.0, f"max_err={err2:.1e}")

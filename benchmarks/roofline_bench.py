@@ -1,0 +1,37 @@
+"""Roofline table from the dry-run records (experiments/dryrun/*.json).
+
+Emits one CSV row per (arch × shape × mesh) cell with the three roofline
+terms, dominant bottleneck, and roofline fraction — §Roofline's source.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import Csv
+
+
+def main(csv: Csv) -> None:
+    files = sorted(glob.glob("experiments/dryrun/*.json"))
+    if not files:
+        csv.add("roofline/no-dryrun-records", 0.0,
+                "run scripts/run_dryrun_sweep.sh first")
+        return
+    for f in files:
+        rec = json.load(open(f))
+        tag = f"{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        if rec.get("status") == "skip":
+            csv.add(f"roofline/{tag}", 0.0, "SKIP(full-attn long-context)")
+            continue
+        if rec.get("status") != "ok":
+            csv.add(f"roofline/{tag}", 0.0, f"FAIL {rec.get('error','')[:60]}")
+            continue
+        r = rec["roofline"]
+        csv.add(
+            f"roofline/{tag}", 0.0,
+            f"t_comp={r['t_compute']:.3e} t_mem={r['t_memory']:.3e} "
+            f"t_coll={r['t_collective']:.3e} dom={r['dominant']} "
+            f"frac={r['roofline_fraction']:.3f} "
+            f"mem_gb={rec['memory']['peak_resident_bytes'] / 1e9:.1f}")

@@ -1,0 +1,48 @@
+"""Benchmark runner: one module per paper figure/table.
+
+Prints ``name,us_per_call,derived`` CSV.  Usage:
+    PYTHONPATH=src python -m benchmarks.run [--only fig8]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks.common import Csv
+
+MODULES = [
+    ("fig1+3", "benchmarks.fig_overheads"),
+    ("fig2", "benchmarks.fig_predictor"),
+    ("fig6+7", "benchmarks.fig_controlled"),
+    ("fig8-11", "benchmarks.fig_cloud"),
+    ("fig12", "benchmarks.fig_polynomial"),
+    ("kernels", "benchmarks.kernel_bench"),
+    ("roofline", "benchmarks.roofline_bench"),
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    csv = Csv()
+    print("name,us_per_call,derived")
+    failures = 0
+    for tag, modname in MODULES:
+        if args.only and args.only not in (tag, modname):
+            continue
+        try:
+            import importlib
+            mod = importlib.import_module(modname)
+            mod.main(csv)
+        except Exception:
+            traceback.print_exc()
+            failures += 1
+    print(f"# done, failures={failures}")
+    return 1 if failures else 0
+
+
+if __name__ == '__main__':
+    sys.exit(main())

@@ -1,0 +1,75 @@
+"""PageRank + n-hop graph filtering on the coded matvec stack (§6.3).
+
+Power iteration with the transition matrix (n,k)-MDS-encoded once; every
+iteration re-plans the S²C² allocation from drifting worker speeds and
+decodes the exact matvec from partial results.
+
+Run:  PYTHONPATH=src python examples/pagerank.py
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.coding import MDSCode
+from repro.core.s2c2 import general_allocation
+from repro.core.traces import controlled_traces
+from repro.data.pipeline import laplacian_matrix, make_graph
+
+N_WORKERS, K, CHUNKS = 12, 10, 20
+
+
+def coded_matvec(code, coded, x, speeds, chunks=CHUNKS):
+    alloc = general_allocation(speeds, code.k, chunks)
+    masks = alloc.masks()
+    weights = code.chunk_decode_weights(masks.T)
+    rows = coded.shape[1]
+    rpc = rows // chunks
+    partials = (coded @ jnp.asarray(x, jnp.float32)).reshape(
+        code.n, chunks, rpc) * jnp.asarray(masks, jnp.float32)[:, :, None]
+    dec = jnp.einsum("ckn,ncr->ckr", jnp.asarray(weights, jnp.float32),
+                     partials)
+    return np.asarray(jnp.transpose(dec, (1, 0, 2)).reshape(-1))
+
+
+def main() -> int:
+    n = 2400
+    adj = make_graph(n, 12, seed=1)
+    col = adj.sum(0, keepdims=True)
+    m = adj / np.maximum(col, 1)
+    m[:, col[0] == 0] = 1.0 / n
+
+    code = MDSCode(n=N_WORKERS, k=K)
+    coded = code.encode(jnp.asarray(m, jnp.float32))
+    traces = controlled_traces(N_WORKERS, 40, n_stragglers=2, seed=7)
+
+    d = 0.85
+    r = np.ones(n) / n
+    r_ref = r.copy()
+    for it in range(40):
+        mr = coded_matvec(code, coded, r, traces[it])[:n]
+        r = (1 - d) / n + d * mr
+        r_ref = (1 - d) / n + d * (m @ r_ref)
+    err = np.abs(r - r_ref).max() / r_ref.max()
+    print(f"pagerank: 40 coded power iterations, rel_err={err:.2e}")
+    top = np.argsort(-r)[:5]
+    print(f"top-5 pages: {top.tolist()}")
+
+    # n-hop graph filtering on the Laplacian (the paper's second graph app)
+    lap = laplacian_matrix(adj[:1200, :1200])
+    code2 = MDSCode(n=N_WORKERS, k=K)
+    coded_l = code2.encode(jnp.asarray(lap, jnp.float32))
+    x = np.random.default_rng(0).standard_normal(1200)
+    want = x.copy()
+    got = x.copy()
+    for hop in range(3):
+        got = coded_matvec(code2, coded_l, got, traces[hop])[:1200]
+        want = lap @ want
+    ferr = np.abs(got - want).max() / (np.abs(want).max() + 1e-12)
+    print(f"3-hop Laplacian filter: rel_err={ferr:.2e}")
+    assert err < 1e-4 and ferr < 1e-4
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

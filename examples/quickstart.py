@@ -1,0 +1,52 @@
+"""Quickstart: S²C² coded matvec in 40 lines.
+
+Encodes a matrix with a (6,4)-MDS code, assigns work by predicted worker
+speeds with Algorithm 1, computes only the assigned chunks, and decodes
+the exact product from the partial results — the paper's whole pipeline.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.coding import MDSCode
+from repro.core.s2c2 import general_allocation
+
+# 1. the data: a 1200×64 matrix, to be multiplied by x repeatedly
+rng = np.random.default_rng(0)
+A = jnp.asarray(rng.standard_normal((1200, 64)), jnp.float32)
+x = jnp.asarray(rng.standard_normal((64,)), jnp.float32)
+
+# 2. encode ONCE with a conservative (6,4)-MDS code -> 6 coded partitions
+code = MDSCode(n=6, k=4)
+coded = code.encode(A)                      # (6, 300, 64)
+print(f"encoded: {coded.shape} — each worker stores a {coded.shape[1]}-row "
+      f"coded partition ({100 / code.k:.0f}% of the data)")
+
+# 3. every iteration: allocate work ∝ predicted speeds (worker 4 is slow)
+speeds = np.array([1.0, 1.0, 0.9, 1.0, 0.25, 0.95])
+chunks = 12
+alloc = general_allocation(speeds, k=code.k, chunks=chunks)
+print(f"chunks per worker: {alloc.count.tolist()}  "
+      f"(coverage per chunk = {alloc.coverage().min()})")
+
+# 4. workers compute ONLY their assigned chunk ranges
+masks = alloc.masks()                       # (6, 12)
+rpc = coded.shape[1] // chunks
+partials = (coded @ x).reshape(code.n, chunks, rpc)
+partials = partials * masks[:, :, None]     # unassigned chunks not computed
+
+# 5. master decodes each chunk from any k covering workers
+weights = code.chunk_decode_weights(masks.T)           # (chunks, k, n)
+dec = jnp.einsum("ckn,ncr->ckr", jnp.asarray(weights, jnp.float32),
+                 jnp.asarray(partials))
+y = jnp.transpose(dec, (1, 0, 2)).reshape(-1)[: A.shape[0]]
+
+err = float(jnp.max(jnp.abs(y - A @ x)))
+print(f"decode error vs direct A@x: {err:.2e}")
+work_saved = 1 - alloc.count.sum() / (code.n * chunks)
+print(f"work saved vs conventional (6,4)-MDS: {work_saved:.0%} "
+      f"(the slack S²C² squeezed out)")
+assert err < 1e-3
+print("OK")

@@ -1,0 +1,56 @@
+"""Serve a small LM with batched requests + the S²C²-coded lm_head.
+
+Demonstrates the serving integration point of the paper's technique: the
+d_model → vocab projection (the biggest matvec at decode) runs under a
+(6,4)-MDS code with per-batch S²C² row scheduling, so a throttled
+model-parallel worker no longer gates every token.  Verifies the coded
+logits match the dense head exactly, then serves a batch of requests.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.models.params import initialize
+from repro.runtime.serve_loop import CodedLMHead, Request, ServeConfig, serve
+
+
+def main() -> int:
+    cfg = get_config("mistral-nemo-12b").reduced()
+    model = build_model(cfg)
+    params = initialize(model.specs(), jax.random.PRNGKey(0))
+
+    # --- coded lm_head check ------------------------------------------------
+    head = params["embed"]["head"].astype(jnp.float32)   # (d, vocab)
+    coded_head = CodedLMHead(head, n=6, k=4, chunks=8)
+    x = jnp.asarray(np.random.default_rng(1).standard_normal(
+        (4, cfg.d_model)), jnp.float32)
+    for speeds in (np.ones(6), np.array([1, 1, 0.2, 1, 1, 0.3])):
+        got = coded_head.logits(x, speeds)
+        want = x @ head
+        err = float(jnp.max(jnp.abs(got - want))) / \
+            float(jnp.max(jnp.abs(want)))
+        print(f"coded lm_head rel_err={err:.2e} @ speeds={speeds.tolist()}")
+        assert err < 1e-3
+
+    # --- batched serving ----------------------------------------------------
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab_size, size=6
+                                        ).astype(np.int32),
+                    max_new=8)
+            for i in range(6)]
+    out = serve(model, params, reqs, ServeConfig(max_batch=3))
+    for rid in sorted(out):
+        print(f"request {rid}: generated {out[rid]}")
+    assert all(len(v) == 8 for v in out.values())
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

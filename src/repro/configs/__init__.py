@@ -1,0 +1,5 @@
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES, shape_by_name
+from repro.configs.registry import ARCH_IDS, all_configs, get_config
+
+__all__ = ["ArchConfig", "ShapeConfig", "SHAPES", "shape_by_name",
+           "ARCH_IDS", "all_configs", "get_config"]

@@ -1,0 +1,24 @@
+"""phi3.5-moe-42b-a6.6b — 16 experts top-2 [hf:microsoft/Phi-3.5-MoE-instruct; hf].
+
+32L d_model=4096 32H (GQA kv=8) d_ff=6400 vocab=32064 (padded 32256), MoE
+16e top-2 every layer.  Full attention (skip long_500k).
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="phi3.5-moe-42b-a6.6b",
+    family="moe",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=6400,
+    vocab_size=32064,
+    head_dim=128,
+    attn_pattern="global",
+    mlp_type="swiglu",
+    num_experts=16,
+    experts_per_token=2,
+    optimizer="adamw",
+)

@@ -1,0 +1,196 @@
+"""LSTM speed predictor (§3.2, §6.1 of the paper) in pure JAX.
+
+Architecture is exactly the paper's: a single-layer LSTM, 1-dim input
+(previous iteration's speed), 4-dim hidden state with tanh activations, and
+a 1-dim linear output head predicting the next iteration's speed.  The
+model is shared across nodes (speeds are batched over nodes) and trained
+with Adam on MSE.  Metrics: MAPE (paper reports 16.7 % on test, ~5 % better
+than the last-value baseline).
+
+The per-step cell is also available as a fused Pallas kernel
+(`repro.kernels.lstm_cell`); this module is the reference implementation
+and the training harness.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "LSTMParams", "init_lstm", "lstm_cell", "lstm_apply", "predict_next",
+    "train_predictor", "mape", "last_value_baseline", "ema_baseline",
+    "SpeedPredictor",
+]
+
+Params = Dict[str, jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class LSTMParams:
+    hidden: int = 4      # paper: 4-dim hidden state (tuned hyperparameter)
+    input_dim: int = 1
+    output_dim: int = 1
+
+
+def init_lstm(cfg: LSTMParams, key: jax.Array) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    h, i = cfg.hidden, cfg.input_dim
+    scale = 1.0 / np.sqrt(h)
+    return {
+        "w_ih": jax.random.normal(k1, (4 * h, i)) * scale,
+        "w_hh": jax.random.normal(k2, (4 * h, h)) * scale,
+        "b": jnp.zeros((4 * h,)).at[h:2 * h].set(1.0),  # forget-gate bias 1
+        "w_out": jax.random.normal(k3, (cfg.output_dim, h)) * scale,
+        "b_out": jnp.zeros((cfg.output_dim,)),
+    }
+
+
+def lstm_cell(params: Params, x: jax.Array, state: Tuple[jax.Array, jax.Array]):
+    """One LSTM step. x: (batch, input_dim); state: (h, c) each (batch, H)."""
+    h_prev, c_prev = state
+    gates = x @ params["w_ih"].T + h_prev @ params["w_hh"].T + params["b"]
+    hdim = h_prev.shape[-1]
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f), jax.nn.sigmoid(o)
+    g = jnp.tanh(g)
+    c = f * c_prev + i * g
+    h = o * jnp.tanh(c)
+    del hdim
+    return h, c
+
+
+def lstm_apply(params: Params, xs: jax.Array) -> jax.Array:
+    """Run the LSTM over a sequence and emit one prediction per step.
+
+    xs: (T, batch, input_dim) -> (T, batch, output_dim); prediction at step
+    t is the model's estimate of x_{t+1} (teacher-forced during training).
+    """
+    batch = xs.shape[1]
+    hdim = params["w_hh"].shape[1]
+    h0 = jnp.zeros((batch, hdim), xs.dtype)
+    c0 = jnp.zeros((batch, hdim), xs.dtype)
+
+    def step(state, x):
+        h, c = lstm_cell(params, x, state)
+        y = h @ params["w_out"].T + params["b_out"]
+        return (h, c), y
+
+    _, ys = jax.lax.scan(step, (h0, c0), xs)
+    return ys
+
+
+@jax.jit
+def predict_next(params: Params, history: jax.Array) -> jax.Array:
+    """Predict next-iteration speeds from history (T, n_nodes)."""
+    xs = history[:, :, None]                        # (T, nodes, 1)
+    ys = lstm_apply(params, xs)
+    return ys[-1, :, 0]
+
+
+def mape(pred: jax.Array, true: jax.Array, eps: float = 1e-8) -> jax.Array:
+    return jnp.mean(jnp.abs(pred - true) / jnp.maximum(jnp.abs(true), eps))
+
+
+def last_value_baseline(history: np.ndarray) -> np.ndarray:
+    """Predict next speed = current speed (the paper's comparison point)."""
+    return history[-1]
+
+
+def ema_baseline(history: np.ndarray, alpha: float = 0.5) -> np.ndarray:
+    w = alpha * (1 - alpha) ** np.arange(history.shape[0])[::-1]
+    w = w / w.sum()
+    return (history * w[:, None]).sum(axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Training
+# ---------------------------------------------------------------------------
+
+def _loss_fn(params: Params, xs: jax.Array, targets: jax.Array) -> jax.Array:
+    preds = lstm_apply(params, xs)                  # (T, B, 1)
+    return jnp.mean((preds[:, :, 0] - targets) ** 2)
+
+
+@partial(jax.jit, static_argnames=("lr",))
+def _adam_step(params, opt_state, xs, targets, step, lr=1e-2,
+               b1=0.9, b2=0.999, eps=1e-8):
+    loss, grads = jax.value_and_grad(_loss_fn)(params, xs, targets)
+    m, v = opt_state
+    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    mhat = jax.tree.map(lambda a: a / (1 - b1 ** (step + 1)), m)
+    vhat = jax.tree.map(lambda a: a / (1 - b2 ** (step + 1)), v)
+    params = jax.tree.map(lambda p, a, b: p - lr * a / (jnp.sqrt(b) + eps),
+                          params, mhat, vhat)
+    return params, (m, v), loss
+
+
+def train_predictor(traces: np.ndarray, epochs: int = 300, lr: float = 1e-2,
+                    seed: int = 0, cfg: LSTMParams = LSTMParams()):
+    """Train on (T, n_nodes) speed traces; 80:20 time split inside.
+
+    Returns (params, metrics dict with train/test MAPE + baselines).
+    """
+    from repro.core.traces import train_test_split
+
+    train, test = train_test_split(traces)
+    params = init_lstm(cfg, jax.random.PRNGKey(seed))
+    opt_state = (jax.tree.map(jnp.zeros_like, params),
+                 jax.tree.map(jnp.zeros_like, params))
+
+    def seq_pair(arr):
+        xs = jnp.asarray(arr[:-1], jnp.float32)[:, :, None]   # inputs
+        tg = jnp.asarray(arr[1:], jnp.float32)                # next-step targets
+        return xs, tg
+
+    xs_tr, tg_tr = seq_pair(train)
+    xs_te, tg_te = seq_pair(test)
+
+    loss = np.inf
+    for step in range(epochs):
+        params, opt_state, loss = _adam_step(params, opt_state, xs_tr, tg_tr, step, lr=lr)
+
+    pred_te = lstm_apply(params, xs_te)[:, :, 0]
+    pred_tr = lstm_apply(params, xs_tr)[:, :, 0]
+    lv_te = jnp.asarray(np.asarray(xs_te)[:, :, 0])           # last-value = input itself
+    metrics = {
+        "final_train_loss": float(loss),
+        "train_mape": float(mape(pred_tr, tg_tr)),
+        "test_mape": float(mape(pred_te, tg_te)),
+        "last_value_test_mape": float(mape(lv_te, tg_te)),
+    }
+    return params, metrics
+
+
+# ---------------------------------------------------------------------------
+# Online wrapper used by the scheduler
+# ---------------------------------------------------------------------------
+
+class SpeedPredictor:
+    """Stateful online predictor: feed measured speeds, get next-iteration
+    predictions.  Mirrors §6.2 — starts by assuming equal speeds, then
+    tracks the LSTM conditioned on the full history so far."""
+
+    def __init__(self, n_nodes: int, params: Params | None = None,
+                 window: int = 32):
+        self.n_nodes = n_nodes
+        self.params = params
+        self.window = window
+        self.history: list[np.ndarray] = []
+
+    def observe(self, speeds: np.ndarray) -> None:
+        self.history.append(np.asarray(speeds, dtype=np.float64))
+
+    def predict(self) -> np.ndarray:
+        if not self.history:
+            return np.ones(self.n_nodes)
+        if self.params is None:
+            return self.history[-1]
+        hist = np.stack(self.history[-self.window:], axis=0)
+        return np.asarray(predict_next(self.params, jnp.asarray(hist, jnp.float32)))

@@ -1,0 +1,77 @@
+"""Fused LSTM cell kernel for the speed predictor.
+
+The scheduler predicts every host's next-iteration speed each step (§6.2:
+"values from all nodes are provided as a batch input").  At 1000+ hosts
+this is a (B=hosts, H=4) recurrence evaluated every training step on the
+master — small, but latency-critical because it sits between collecting
+response times and issuing the next allocation.  The fused kernel does both
+gate matmuls, all activations, and the state update in one VMEM round-trip
+(vs. 8+ HLO ops / intermediate buffers for the unfused version).
+
+Shapes are padded to TPU tiles by the wrapper in ops.py; the kernel itself
+assumes aligned (B, I), (B, H) inputs with 4H packed gate weights.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["lstm_cell_pallas"]
+
+
+def _kernel(x_ref, h_ref, c_ref, wih_ref, whh_ref, b_ref, h_out_ref, c_out_ref,
+            *, hidden: int):
+    x = x_ref[...].astype(jnp.float32)
+    h = h_ref[...].astype(jnp.float32)
+    c = c_ref[...].astype(jnp.float32)
+    gates = (jnp.dot(x, wih_ref[...].astype(jnp.float32).T,
+                     preferred_element_type=jnp.float32)
+             + jnp.dot(h, whh_ref[...].astype(jnp.float32).T,
+                       preferred_element_type=jnp.float32)
+             + b_ref[...].astype(jnp.float32)[0])
+    i = jax.nn.sigmoid(gates[:, 0 * hidden:1 * hidden])
+    f = jax.nn.sigmoid(gates[:, 1 * hidden:2 * hidden])
+    g = jnp.tanh(gates[:, 2 * hidden:3 * hidden])
+    o = jax.nn.sigmoid(gates[:, 3 * hidden:4 * hidden])
+    c_new = f * c + i * g
+    h_out_ref[...] = (o * jnp.tanh(c_new)).astype(h_out_ref.dtype)
+    c_out_ref[...] = c_new.astype(c_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lstm_cell_pallas(x: jax.Array, h: jax.Array, c: jax.Array,
+                     w_ih: jax.Array, w_hh: jax.Array, b: jax.Array,
+                     interpret: bool = False):
+    """x: (B, I); h, c: (B, H); w_ih: (4H, I); w_hh: (4H, H); b: (4H,).
+
+    Returns (h', c').  Single-block kernel: the whole problem fits VMEM for
+    B ≤ ~4096, H ≤ 128 (the predictor uses H = 4 padded to lane width by
+    the ops.py wrapper).
+    """
+    bsz, idim = x.shape
+    hdim = h.shape[1]
+    assert w_ih.shape == (4 * hdim, idim), (w_ih.shape, hdim, idim)
+    assert w_hh.shape == (4 * hdim, hdim)
+    out_shapes = (jax.ShapeDtypeStruct((bsz, hdim), h.dtype),
+                  jax.ShapeDtypeStruct((bsz, hdim), c.dtype))
+    h_new, c_new = pl.pallas_call(
+        functools.partial(_kernel, hidden=hdim),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((bsz, idim), lambda i: (0, 0)),
+            pl.BlockSpec((bsz, hdim), lambda i: (0, 0)),
+            pl.BlockSpec((bsz, hdim), lambda i: (0, 0)),
+            pl.BlockSpec((4 * hdim, idim), lambda i: (0, 0)),
+            pl.BlockSpec((4 * hdim, hdim), lambda i: (0, 0)),
+            pl.BlockSpec((1, 4 * hdim), lambda i: (0, 0)),
+        ],
+        out_specs=(pl.BlockSpec((bsz, hdim), lambda i: (0, 0)),
+                   pl.BlockSpec((bsz, hdim), lambda i: (0, 0))),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(x, h, c, w_ih, w_hh, b.reshape(1, -1))
+    return h_new, c_new

@@ -1,0 +1,57 @@
+"""MDS encode kernel: coded partitions from data blocks, C[w] = Σ_i G[w,i]·A[i].
+
+Encoding happens once per dataset (the paper's one-time setup cost), but at
+framework scale "once" is a full pass over a multi-GB matrix per host, so
+it's worth a kernel: the contraction dim k is tiny (≤ 32) while rows×d is
+huge — a perfect streaming op.  We tile (rows, d) through VMEM and keep all
+k input blocks' tiles resident per step: VMEM per step = (k+1)·tile bytes.
+
+The generator G is prefetched as a scalar operand (it is k·n floats — it
+parameterizes the *index-free* linear combination, computed on the VPU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+__all__ = ["mds_encode_pallas"]
+
+
+def _kernel(g_ref, a_ref, o_ref):
+    """g_ref: (1, k) VMEM row of G for this output partition;
+    a_ref: (k, tr, td) tiles of every data block; o_ref: (1, tr, td)."""
+    g = g_ref[0, :]                                   # (k,)
+    a = a_ref[...]                                    # (k, tr, td)
+    acc = jnp.tensordot(g.astype(jnp.float32), a.astype(jnp.float32),
+                        axes=([0], [0]))              # (tr, td)
+    o_ref[0, :, :] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("row_tile", "d_tile", "interpret"))
+def mds_encode_pallas(g: jax.Array, blocks: jax.Array, row_tile: int = 256,
+                      d_tile: int = 512, interpret: bool = False) -> jax.Array:
+    """g: (n, k); blocks: (k, rows, d) -> (n, rows, d) coded partitions."""
+    n, k = g.shape
+    k_b, rows, d = blocks.shape
+    assert k == k_b, (k, k_b)
+    if rows % row_tile or d % d_tile:
+        raise ValueError(f"(rows={rows}, d={d}) must tile by "
+                         f"({row_tile}, {d_tile})")
+    grid = (n, rows // row_tile, d // d_tile)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, k), lambda w, i, j: (w, 0)),
+            pl.BlockSpec((k, row_tile, d_tile), lambda w, i, j: (0, i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, row_tile, d_tile), lambda w, i, j: (w, i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, rows, d), blocks.dtype),
+        interpret=interpret,
+    )(g.astype(blocks.dtype), blocks)
+    return out

@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: each kernel's test sweeps shapes and
+dtypes and asserts allclose against the function here.  They are also the
+fallback implementation on backends without Pallas support.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "coded_matvec_ref", "mds_encode_ref", "mds_decode_ref", "lstm_cell_ref",
+]
+
+
+def coded_matvec_ref(a: jax.Array, x: jax.Array, block_ids: jax.Array,
+                     block_rows: int) -> jax.Array:
+    """Slack-squeeze coded matmul oracle.
+
+    a: (rows, d) — this worker's coded partition, rows = chunks*block_rows.
+    x: (d, nvec) — input vectors.
+    block_ids: (nb,) int32 — the *assigned* row-block indices (an S²C²
+        cyclic range, in computation order).
+    Returns (nb, block_rows, nvec): compacted per-block products
+        out[i] = A[block_ids[i]·br : (block_ids[i]+1)·br] @ x.
+    """
+    d = a.shape[1]
+    blocks = a.reshape(-1, block_rows, d)                    # (chunks, br, d)
+    sel = blocks[block_ids]                                  # (nb, br, d)
+    return jnp.einsum("nbd,dv->nbv", sel, x,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def mds_encode_ref(g: jax.Array, blocks: jax.Array) -> jax.Array:
+    """MDS encode oracle.
+
+    g: (n, k) generator; blocks: (k, rows, d) data blocks.
+    Returns (n, rows, d) coded partitions = tensordot over k.
+    """
+    return jnp.einsum("nk,krd->nrd", g, blocks,
+                      preferred_element_type=jnp.float32).astype(blocks.dtype)
+
+
+def mds_decode_ref(w: jax.Array, y: jax.Array) -> jax.Array:
+    """Per-chunk decode oracle.
+
+    w: (chunks, k, m) decode weights (m = number of collected responses);
+    y: (chunks, m, r) stacked per-chunk partial results.
+    Returns (chunks, k, r): decoded data-block products per chunk.
+    """
+    return jnp.einsum("ckm,cmr->ckr", w, y,
+                      preferred_element_type=jnp.float32).astype(y.dtype)
+
+
+def lstm_cell_ref(x: jax.Array, h: jax.Array, c: jax.Array,
+                  w_ih: jax.Array, w_hh: jax.Array, b: jax.Array):
+    """Fused LSTM cell oracle (gate order i, f, g, o).
+
+    x: (B, I); h, c: (B, H); w_ih: (4H, I); w_hh: (4H, H); b: (4H,).
+    Returns (h', c') each (B, H).
+    """
+    gates = x @ w_ih.T + h @ w_hh.T + b
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    i, f, o = jax.nn.sigmoid(i), jax.nn.sigmoid(f), jax.nn.sigmoid(o)
+    g = jnp.tanh(g)
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new, c_new

@@ -1,0 +1,78 @@
+"""Logical-axis → mesh-axis sharding rules (t5x-style).
+
+Parameters declare *logical* axes (``vocab``, ``embed``, ``mlp`` …); a
+rules table maps them onto mesh axes.  The resolver drops any mapping
+whose dimension is not divisible by the mesh-axis size (e.g. 8 KV heads on
+a 16-way model axis ⇒ replicate), so one rules table serves every arch.
+
+Default placement = TP(model) on the wide feature dims + FSDP(pod, data)
+on the other dim of every ≥2-D parameter; batch over (pod, data).
+Hillclimbing swaps rules per arch via the ``rules`` override dicts.
+
+Low-level resolution lives in launch/partition.py (import-cycle-free);
+this module adds the ParamSpec/tree-level conveniences.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.partition import (DEFAULT_RULES, constrain, current_mesh,
+                                    mentions, resolve_axes)
+from repro.models.params import ParamSpec
+
+__all__ = ["DEFAULT_RULES", "resolve_axes", "constrain", "current_mesh",
+           "sharding_for_spec", "param_shardings", "batch_shardings",
+           "cache_sharding_rules"]
+
+
+def sharding_for_spec(spec: ParamSpec, mesh: Mesh,
+                      rules: Optional[Dict] = None) -> NamedSharding:
+    return NamedSharding(mesh, resolve_axes(spec.axes, spec.shape, mesh, rules))
+
+
+def param_shardings(specs, mesh: Mesh, rules: Optional[Dict] = None):
+    """Spec tree -> NamedSharding tree."""
+    return jax.tree.map(
+        lambda s: sharding_for_spec(s, mesh, rules), specs,
+        is_leaf=lambda v: isinstance(v, ParamSpec))
+
+
+def batch_shardings(mesh: Mesh, abstract_batch, rules: Optional[Dict] = None):
+    """Shard every batch leaf's leading (batch) dim over (pod, data)."""
+    def sh(leaf):
+        axes = ("batch",) + (None,) * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, resolve_axes(axes, leaf.shape, mesh, rules))
+    return jax.tree.map(sh, abstract_batch)
+
+
+def cache_sharding_rules(mesh: Mesh, abstract_caches,
+                         rules: Optional[Dict] = None):
+    """Decode-state shardings.
+
+    Attention KV caches (B, T, KV, hd): batch over (pod,data); KV heads on
+    ``model`` when divisible, else head_dim on ``model`` (GSPMD contracts
+    head_dim with a psum — cheap at decode), else replicate.
+    SSM states (B, H, N, P) / (B, H, P): heads on ``model``.
+    Conv states and scalars: batch only.
+    """
+    def sh(leaf):
+        shape = leaf.shape
+        if len(shape) == 4:            # (B, T, KV, hd) or (B, H, N, P)
+            axes = ("batch", None, "heads", "head_dim_tp")
+        elif len(shape) == 3:          # (B, H, P) / (B, conv, C)
+            axes = ("batch", None, "heads")
+        elif len(shape) == 2:
+            axes = ("batch", None)
+        else:
+            axes = ("batch",) + (None,) * (len(shape) - 1)
+        local = {**(rules or {}), "heads": "model", "head_dim_tp": None}
+        spec = resolve_axes(axes, shape, mesh, local)
+        if len(shape) == 4 and not mentions(spec, "model"):
+            local = {**(rules or {}), "heads": None, "head_dim_tp": "model"}
+            spec = resolve_axes(axes, shape, mesh, local)
+        return NamedSharding(mesh, spec)
+    return jax.tree.map(sh, abstract_caches)

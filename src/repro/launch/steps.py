@@ -1,0 +1,223 @@
+"""train_step / serve_step builders + abstract input specs per (arch, shape).
+
+Everything here is shape-only until the caller initializes real params:
+``abstract_inputs`` returns ShapeDtypeStructs (weak-type-correct, no
+allocation) and ``*_shardings`` the matching NamedShardings, which is what
+the multi-pod dry-run lowers against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.launch import sharding as SH
+from repro.models import build_model
+from repro.models.params import abstract, cast_specs
+from repro.optim.optimizer import Optimizer, make_optimizer
+
+__all__ = ["build_train_step", "build_prefill_step", "build_decode_step",
+           "abstract_inputs", "abstract_train_state", "train_state_shardings",
+           "input_shardings", "grad_accum_for", "enc_len_for"]
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins)
+# ---------------------------------------------------------------------------
+
+def enc_len_for(cfg: ArchConfig, shape: ShapeConfig) -> int:
+    """Encoder length for enc-dec archs: half the cell's token budget."""
+    return shape.seq_len // 2
+
+
+def grad_accum_for(cfg: ArchConfig, shape: ShapeConfig, mesh: Optional[Mesh]
+                   ) -> int:
+    """Microbatch count: honor cfg but keep microbatch divisible by DP.
+
+    REPRO_GRAD_ACCUM overrides for perf experiments (fewer microbatches ⇒
+    fewer per-microbatch FSDP weight re-gathers; see EXPERIMENTS.md §Perf).
+    """
+    import os as _os
+    accum = int(_os.environ.get("REPRO_GRAD_ACCUM", "0")) \
+        or max(1, cfg.grad_accum_train)
+    dp = 1
+    if mesh is not None:
+        dp = int(np.prod([mesh.shape[a] for a in ("pod", "data")
+                          if a in mesh.shape]))
+    while accum > 1 and (shape.global_batch % accum
+                         or (shape.global_batch // accum) % dp):
+        accum //= 2
+    return max(accum, 1)
+
+
+def abstract_inputs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Batch ShapeDtypeStructs for one cell."""
+    b, s = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    if shape.kind == "train":
+        if cfg.is_encdec:
+            e = enc_len_for(cfg, shape)
+            return {
+                "frames": jax.ShapeDtypeStruct((b, e, cfg.frontend_dim),
+                                               jnp.bfloat16),
+                "tokens": jax.ShapeDtypeStruct((b, s - e), tok),
+                "labels": jax.ShapeDtypeStruct((b, s - e), tok),
+            }
+        out = {"tokens": jax.ShapeDtypeStruct((b, s), tok),
+               "labels": jax.ShapeDtypeStruct((b, s), tok)}
+        if cfg.frontend == "vit_stub":
+            out["image_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_tokens, cfg.frontend_dim), jnp.bfloat16)
+        return out
+    if shape.kind == "prefill":
+        if cfg.is_encdec:
+            e = enc_len_for(cfg, shape)
+            return {"frames": jax.ShapeDtypeStruct((b, e, cfg.frontend_dim),
+                                                   jnp.bfloat16),
+                    "tokens": jax.ShapeDtypeStruct((b, s - e), tok)}
+        out = {"tokens": jax.ShapeDtypeStruct((b, s), tok)}
+        if cfg.frontend == "vit_stub":
+            out["image_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_tokens, cfg.frontend_dim), jnp.bfloat16)
+        return out
+    # decode: one token + caches + position
+    model = build_model(cfg)
+    if cfg.is_encdec:
+        caches = jax.eval_shape(
+            lambda: model.init_cache(b, s, enc_len=enc_len_for(cfg, shape)))
+    else:
+        caches = jax.eval_shape(lambda: model.init_cache(b, s))
+    return {"token": jax.ShapeDtypeStruct((b, 1), tok),
+            "caches": caches,
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def input_shardings(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                    rules: Optional[Dict] = None) -> Dict[str, Any]:
+    """NamedShardings matching abstract_inputs."""
+    specs = abstract_inputs(cfg, shape)
+    out: Dict[str, Any] = {}
+    for k, v in specs.items():
+        if k == "caches":
+            out[k] = SH.cache_sharding_rules(mesh, v, rules)
+        elif k == "pos":
+            out[k] = NamedSharding(mesh, P())
+        else:
+            out[k] = SH.batch_shardings(mesh, v, rules)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Train state
+# ---------------------------------------------------------------------------
+
+def serve_rules(cfg: ArchConfig, tp: int = 16,
+                hbm_budget: float = 8e9) -> Dict:
+    """Inference sharding override: TP-only weights when they fit.
+
+    FSDP-sharded weights must be all-gathered across the data axis for
+    EVERY decoded token (measured 6.6 GB/chip/token on gemma3-27b); with
+    TP-only sharding the weights are replicated across data and the decode
+    step runs gather-free.  Falls back to FSDP for archs whose per-chip
+    TP-sharded weights exceed the HBM budget (nemotron-340b,
+    mistral-large-123b, mixtral-8x22b at 16-way TP).
+    """
+    from repro.models import build_model
+    from repro.models.params import tree_bytes
+    per_chip = tree_bytes(build_model(cfg).specs()) / tp
+    if per_chip <= hbm_budget:
+        return {"embed": None}          # drop the FSDP mapping
+    return {}
+
+
+def abstract_train_state(cfg: ArchConfig) -> Tuple[Any, Any, Optimizer]:
+    """(abstract params, abstract opt state, optimizer)."""
+    model = build_model(cfg)
+    specs = model.specs()
+    opt = make_optimizer(cfg.optimizer, lr=1e-4)
+    return abstract(specs), abstract(opt.state_specs(specs)), opt
+
+
+def train_state_shardings(cfg: ArchConfig, mesh: Mesh,
+                          rules: Optional[Dict] = None):
+    model = build_model(cfg)
+    specs = model.specs()
+    opt = make_optimizer(cfg.optimizer, lr=1e-4)
+    return (SH.param_shardings(specs, mesh, rules),
+            SH.param_shardings(opt.state_specs(specs), mesh, rules))
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: ArchConfig, shape: ShapeConfig,
+                     mesh: Optional[Mesh] = None, opt: Optional[Optimizer] = None):
+    """Returns train_step(params, opt_state, step, batch) ->
+    (params, opt_state, metrics) with microbatched gradient accumulation."""
+    model = build_model(cfg)
+    opt = opt or make_optimizer(cfg.optimizer, lr=1e-4)
+    accum = grad_accum_for(cfg, shape, mesh)
+
+    def train_step(params, opt_state, step, batch):
+        def split_mb(x):
+            return x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
+
+        mbs = jax.tree.map(split_mb, batch)
+
+        def micro(acc, mb):
+            loss, grads = jax.value_and_grad(model.loss_fn)(params, mb)
+            acc_loss, acc_grads = acc
+            acc_grads = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), acc_grads, grads)
+            return (acc_loss + loss, acc_grads), None
+
+        # zeros_like keeps the carry sharded like the params (a bare
+        # jnp.zeros carry can end up replicated → huge accum-scan state)
+        zero = (jnp.zeros((), jnp.float32),
+                jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                             params))
+        (loss_sum, grads), _ = jax.lax.scan(micro, zero, mbs)
+        grads = jax.tree.map(lambda g: g / accum, grads)
+        loss = loss_sum / accum
+        new_params, new_opt = opt.update(grads, opt_state, params, step)
+        gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                             for g in jax.tree.leaves(grads)))
+        return new_params, new_opt, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def build_prefill_step(cfg: ArchConfig):
+    model = build_model(cfg)
+
+    if cfg.is_encdec:
+        def prefill_step(params, batch):
+            return model.prefill(params, batch["frames"], batch["tokens"])
+    elif cfg.frontend == "vit_stub":
+        def prefill_step(params, batch):
+            return model.prefill(params, batch["tokens"],
+                                 image_embeds=batch["image_embeds"])
+    else:
+        def prefill_step(params, batch):
+            return model.prefill(params, batch["tokens"])
+    return prefill_step
+
+
+def build_decode_step(cfg: ArchConfig):
+    model = build_model(cfg)
+
+    def decode_step(params, batch):
+        logits, caches = model.decode_step(params, batch["token"],
+                                           batch["caches"], batch["pos"])
+        # greedy next token, ready for the next iteration
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, caches
+    return decode_step

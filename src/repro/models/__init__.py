@@ -1,0 +1,15 @@
+"""Architecture zoo: unified decoder LM + encoder-decoder, ParamSpec-based."""
+
+from repro.configs.base import ArchConfig
+from repro.models.encdec import EncDecLM
+from repro.models.lm import LM
+
+
+def build_model(cfg: ArchConfig):
+    """Factory: returns the model object for an ArchConfig."""
+    if cfg.is_encdec:
+        return EncDecLM(cfg)
+    return LM(cfg)
+
+
+__all__ = ["build_model", "LM", "EncDecLM"]

@@ -1,0 +1,191 @@
+"""Encoder–decoder LM (Seamless-M4T-style text backbone).
+
+The speech/audio frontend is a stub per the assignment: ``input_specs``
+supplies precomputed frame embeddings (B, T_enc, frontend_dim) which a
+linear adapter maps to d_model.  Encoder = bidirectional attention + MLP;
+decoder = causal self-attention + cross-attention + MLP.  Both stacks scan
+over layers; serving unrolls the decoder with self- and (static) cross-KV
+caches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.launch.partition import constrain
+from repro.models import layers as L
+from repro.models.params import ParamSpec, cast_specs
+
+Params = Dict[str, Any]
+
+
+def _enc_block_specs(cfg: ArchConfig) -> Params:
+    return {"norm1": L.norm_spec(cfg), "attn": L.attn_specs(cfg),
+            "norm2": L.norm_spec(cfg), "mlp": L.mlp_specs(cfg)}
+
+
+def _dec_block_specs(cfg: ArchConfig) -> Params:
+    return {"norm1": L.norm_spec(cfg), "self_attn": L.attn_specs(cfg),
+            "norm_x": L.norm_spec(cfg), "cross_attn": L.cross_attn_specs(cfg),
+            "norm2": L.norm_spec(cfg), "mlp": L.mlp_specs(cfg)}
+
+
+def _stack(tree, n):
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes,
+                            s.dtype, s.init, s.scale),
+        tree, is_leaf=lambda v: isinstance(v, ParamSpec))
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecLM:
+    cfg: ArchConfig
+
+    def specs(self) -> Params:
+        cfg = self.cfg
+        out = {
+            "frontend_proj": ParamSpec((cfg.frontend_dim or cfg.d_model,
+                                        cfg.d_model),
+                                       ("unsharded", "embed"),
+                                       init="scaled_normal"),
+            "embed": L.embed_specs(cfg),
+            "enc": _stack(_enc_block_specs(cfg), cfg.enc_layers),
+            "enc_norm": L.norm_spec(cfg),
+            "dec": _stack(_dec_block_specs(cfg), cfg.num_layers),
+            "dec_norm": L.norm_spec(cfg),
+        }
+        return cast_specs(out, jnp.dtype(cfg.dtype))
+
+    # -- encoder ---------------------------------------------------------------
+    def encode(self, params: Params, frames: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        x = frames.astype(jnp.dtype(cfg.dtype)) @ params["frontend_proj"]
+
+        def body(x_c, p):
+            x_c = x_c + L.attn_apply(p["attn"], L.apply_norm(p["norm1"], x_c),
+                                     cfg, causal=False, local=False)
+            x_c = x_c + L.mlp_apply(p["mlp"], L.apply_norm(p["norm2"], x_c),
+                                    cfg)
+            return constrain(x_c, ("batch", None, None)), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["enc"])
+        return L.apply_norm(params["enc_norm"], x)
+
+    # -- decoder (training) ------------------------------------------------------
+    def forward_train(self, params: Params, batch: Dict) -> jax.Array:
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        x = L.embed_apply(params["embed"], batch["tokens"])
+
+        def body(carry, p):
+            x_c = carry
+            x_c = x_c + L.attn_apply(p["self_attn"],
+                                     L.apply_norm(p["norm1"], x_c),
+                                     cfg, causal=True, local=False)
+            k, v = L.cross_kv(p["cross_attn"], enc_out, cfg)
+            x_c = x_c + L.cross_attn_apply(p["cross_attn"],
+                                           L.apply_norm(p["norm_x"], x_c),
+                                           k, v, cfg)
+            x_c = x_c + L.mlp_apply(p["mlp"], L.apply_norm(p["norm2"], x_c),
+                                    cfg)
+            return constrain(x_c, ("batch", None, None)), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["dec"])
+        x = L.apply_norm(params["dec_norm"], x)
+        logits = L.head_apply(params["embed"], x, cfg).astype(jnp.float32)
+        return constrain(logits, ("batch", None, "vocab"))
+
+    def loss_fn(self, params: Params, batch: Dict) -> jax.Array:
+        logits = self.forward_train(params, batch)
+        tgt = batch["labels"][:, 1:]
+        lg = logits[:, :-1]
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        onehot = jax.nn.one_hot(tgt, lg.shape[-1], dtype=lg.dtype)
+        gold = jnp.sum(lg * onehot, axis=-1)
+        return (lse - gold).mean()
+
+    # -- serving -------------------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int, enc_len: int,
+                   dtype=None) -> List:
+        cfg = self.cfg
+        dtype = dtype or jnp.dtype(cfg.dtype)
+        caches = []
+        for _ in range(cfg.num_layers):
+            shape_self = (batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+            shape_cross = (batch, enc_len, cfg.num_kv_heads, cfg.head_dim)
+            caches.append({
+                "self": {"k": jnp.zeros(shape_self, dtype),
+                         "v": jnp.zeros(shape_self, dtype)},
+                "cross": {"k": jnp.zeros(shape_cross, dtype),
+                          "v": jnp.zeros(shape_cross, dtype)},
+            })
+        return caches
+
+    def prefill(self, params: Params, frames: jax.Array, tokens: jax.Array,
+                max_seq=None) -> Tuple[jax.Array, List]:
+        """Encode + decoder prefill; returns last-token logits + caches."""
+        cfg = self.cfg
+        enc_out = self.encode(params, frames)
+        x = L.embed_apply(params["embed"], tokens)
+        caches: List[Any] = []
+        for l in range(cfg.num_layers):
+            p = jax.tree.map(lambda a: a[l], params["dec"])
+            x = constrain(x, ("batch", None, None))
+            h = L.apply_norm(p["norm1"], x)
+            x = x + L.attn_apply(p["self_attn"], h, cfg, causal=True,
+                                 local=False)
+            k_self, v_self = L.attn_prefill_kv(p["self_attn"], h, cfg)
+            k_x, v_x = L.cross_kv(p["cross_attn"], enc_out, cfg)
+            x = x + L.cross_attn_apply(p["cross_attn"],
+                                       L.apply_norm(p["norm_x"], x),
+                                       k_x, v_x, cfg)
+            x = x + L.mlp_apply(p["mlp"], L.apply_norm(p["norm2"], x), cfg)
+            dt = jnp.dtype(cfg.dtype)
+            s = tokens.shape[1]
+            if max_seq is not None and max_seq > s:
+                pad = ((0, 0), (0, max_seq - s), (0, 0), (0, 0))
+                k_self = jnp.pad(k_self, pad)
+                v_self = jnp.pad(v_self, pad)
+            caches.append({
+                "self": {"k": k_self.astype(dt), "v": v_self.astype(dt)},
+                "cross": {"k": k_x.astype(dt), "v": v_x.astype(dt)},
+            })
+        x = L.apply_norm(params["dec_norm"], x)
+        logits = L.head_apply(params["embed"], x[:, -1:], cfg)
+        return logits[:, 0].astype(jnp.float32), caches
+
+    def decode_step(self, params: Params, token: jax.Array, caches: List,
+                    pos: jax.Array) -> Tuple[jax.Array, List]:
+        cfg = self.cfg
+        x = L.embed_apply(params["embed"], token)
+        new_caches = []
+        for l in range(cfg.num_layers):
+            p = jax.tree.map(lambda a: a[l], params["dec"])
+            x = constrain(x, ("batch", None, None))
+            h = L.apply_norm(p["norm1"], x)
+            y, c_self = L.attn_decode(p["self_attn"], h, cfg,
+                                      caches[l]["self"], pos, local=False)
+            x = x + y
+            # cross attention against the static encoder KV
+            b = x.shape[0]
+            hx = L.apply_norm(p["norm_x"], x)
+            q = (hx @ p["cross_attn"]["wq"]).reshape(
+                b, 1, cfg.num_heads, cfg.head_dim)
+            att = L.decode_attention(q, caches[l]["cross"]["k"],
+                                     caches[l]["cross"]["v"],
+                                     pos=jnp.int32(caches[l]["cross"]["k"].shape[1] - 1))
+            x = x + att.reshape(b, 1, cfg.q_dim) @ p["cross_attn"]["wo"]
+            x = x + L.mlp_apply(p["mlp"], L.apply_norm(p["norm2"], x), cfg)
+            new_caches.append({"self": c_self, "cross": caches[l]["cross"]})
+        x = L.apply_norm(params["dec_norm"], x)
+        logits = L.head_apply(params["embed"], x, cfg).astype(jnp.float32)
+        return logits[:, 0], new_caches

@@ -1,0 +1,128 @@
+"""Top-k Mixture-of-Experts block (Mixtral / Phi-3.5 style).
+
+GShard-style dense dispatch: tokens are routed to their top-k experts with
+a capacity limit; dispatch/combine are one-hot einsums, which (a) lower to
+clean all-to-all-free sharded matmuls when the ``expert`` axis maps to the
+``model`` mesh axis, and (b) give the *active*-parameter FLOP count
+(E × capacity × d × ff), so roofline numbers reflect real MoE economics
+rather than dense-compute-everything.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.params import ParamSpec
+
+Params = Dict[str, jax.Array]
+
+
+def moe_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    specs = {
+        "router": ParamSpec((d, e), ("embed", "unsharded"), jnp.float32,
+                            init="scaled_normal"),
+    }
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        specs.update({
+            "wg": ParamSpec((e, d, f), ("expert", "embed", "mlp"),
+                            init="scaled_normal"),
+            "wu": ParamSpec((e, d, f), ("expert", "embed", "mlp"),
+                            init="scaled_normal"),
+            "wd": ParamSpec((e, f, d), ("expert", "mlp", "embed"),
+                            init="scaled_normal"),
+        })
+    else:
+        specs.update({
+            "wi": ParamSpec((e, d, f), ("expert", "embed", "mlp"),
+                            init="scaled_normal"),
+            "wd": ParamSpec((e, f, d), ("expert", "mlp", "embed"),
+                            init="scaled_normal"),
+        })
+    return specs
+
+
+MOE_SEGMENT = 512   # max sequence positions routed per dispatch group
+
+
+def moe_apply(p: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d), top-k routed experts with capacity.
+
+    Long sequences are processed in segments (scan over S blocks): GShard
+    capacity buffers are O(tokens²/E) through the one-hot dispatch, which
+    explodes at 32k-token prefill — per-segment routing bounds the
+    dispatch tensors at (B·seg, E, C_seg) while keeping FLOPs identical.
+    """
+    b, s, d = x.shape
+    if s > MOE_SEGMENT:
+        seg = MOE_SEGMENT
+        while s % seg:
+            seg -= 1
+        nseg = s // seg
+        xs = jnp.moveaxis(x.reshape(b, nseg, seg, d), 1, 0)
+
+        def body(_, xseg):
+            return None, _moe_dispatch(p, xseg, cfg)
+
+        _, ys = jax.lax.scan(body, None, xs)
+        return jnp.moveaxis(ys, 0, 1).reshape(b, s, d)
+    return _moe_dispatch(p, x, cfg)
+
+
+def _moe_dispatch(p: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    tokens = b * s
+    xf = x.reshape(tokens, d)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])          # (T, E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    topk_g, topk_i = jax.lax.top_k(gates, k)                  # (T, k)
+    topk_g = topk_g / jnp.maximum(topk_g.sum(-1, keepdims=True), 1e-9)
+
+    capacity = int(np.ceil(tokens * k / e * cfg.moe_capacity_factor))
+    capacity = max(capacity, 4)
+
+    # position of each (token, slot) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(topk_i, e, dtype=jnp.int32)       # (T, k, E)
+    flat = onehot.reshape(tokens * k, e)
+    pos_in_expert = jnp.cumsum(flat, axis=0) - flat           # (T*k, E)
+    pos = (pos_in_expert * flat).sum(-1).reshape(tokens, k)   # (T, k)
+    keep = pos < capacity
+
+    # dispatch: (T, k, E, C) one-hot — contracted immediately, never
+    # materialized at full size after XLA fusion.
+    disp = (jax.nn.one_hot(topk_i, e, dtype=x.dtype)[..., None]
+            * jax.nn.one_hot(pos, capacity, dtype=x.dtype)[:, :, None, :]
+            * keep[..., None, None].astype(x.dtype))          # (T,k,E,C)
+    disp_t = disp.sum(1)                                      # (T, E, C)
+    expert_in = jnp.einsum("td,tec->ecd", xf, disp_t)         # (E, C, d)
+
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp_type == "swiglu" else jax.nn.gelu
+        h = act(jnp.einsum("ecd,edf->ecf", expert_in, p["wg"])) * \
+            jnp.einsum("ecd,edf->ecf", expert_in, p["wu"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", expert_in, p["wi"]))
+    expert_out = jnp.einsum("ecf,efd->ecd", h, p["wd"])       # (E, C, d)
+
+    combine = jnp.einsum("tkec,tk->tec", disp,
+                         topk_g.astype(x.dtype))              # (T, E, C)
+    out = jnp.einsum("tec,ecd->td", combine, expert_out)
+    return out.reshape(b, s, d)
+
+
+def load_balancing_loss(p: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Switch-style aux loss: E · Σ_e f_e · P_e (mean gate × token fraction)."""
+    b, s, d = x.shape
+    logits = x.reshape(-1, d).astype(jnp.float32) @ p["router"]
+    gates = jax.nn.softmax(logits, -1)
+    top1 = jnp.argmax(gates, -1)
+    frac = jnp.mean(jax.nn.one_hot(top1, cfg.num_experts, dtype=jnp.float32), 0)
+    prob = jnp.mean(gates, 0)
+    return cfg.num_experts * jnp.sum(frac * prob)

@@ -1,0 +1,591 @@
+"""Recurrent / state-space blocks: Mamba-2 (SSD), mLSTM and sLSTM (xLSTM).
+
+All three expose the same interface triplet:
+
+* ``*_specs(cfg)``               — ParamSpec tree;
+* ``*_apply(p, x, cfg)``         — full-sequence (train / prefill) path,
+                                   chunkwise-parallel where the math allows;
+* ``*_decode(p, x, cfg, state)`` — single-token step with explicit state.
+
+Chunkwise formulations: within a chunk the recurrence is unrolled into
+attention-like masked matmuls (MXU-friendly); across chunks a `lax.scan`
+carries the running state — O(S·Q) memory, O(S·Q·d) FLOPs for chunk Q.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.params import ParamSpec
+
+Params = Dict[str, jax.Array]
+
+CHUNK = 128
+
+
+# ===========================================================================
+# Mamba-2 (SSD)
+# ===========================================================================
+
+def _mamba_dims(cfg: ArchConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    head_dim = 64
+    nheads = d_inner // head_dim
+    return d_inner, nheads, head_dim
+
+
+def mamba_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    d_inner, nheads, head_dim = _mamba_dims(cfg)
+    n = cfg.ssm_state
+    return {
+        "in_proj": ParamSpec((d, 2 * d_inner + 2 * n + nheads),
+                             ("embed", "mlp"), init="scaled_normal"),
+        "conv_w": ParamSpec((cfg.ssm_conv, d_inner + 2 * n),
+                            ("conv", "mlp"), init="scaled_normal"),
+        "a_log": ParamSpec((nheads,), ("unsharded",), jnp.float32, "zeros"),
+        "d_skip": ParamSpec((nheads,), ("unsharded",), jnp.float32, "ones"),
+        "dt_bias": ParamSpec((nheads,), ("unsharded",), jnp.float32, "zeros"),
+        "out_proj": ParamSpec((d_inner, d), ("mlp", "embed"),
+                              init="scaled_normal"),
+    }
+
+
+def _ssd_chunk_scan(xh, dt, b, c, a_log, chunk: int):
+    """SSD chunkwise scan.
+
+    xh: (B, S, H, P) inputs; dt: (B, S, H) positive step sizes;
+    b, c: (B, S, N) input/output projections (shared across heads, 1 group);
+    a_log: (H,) log-decay parameter.  Returns (B, S, H, P), final state
+    (B, H, N, P).
+    """
+    bs, s, h, p = xh.shape
+    n = b.shape[-1]
+    nc = s // chunk
+    # per-step log decay: da = -exp(a_log) * dt  (Mamba-2 scalar-per-head A)
+    da = -jnp.exp(a_log)[None, None, :] * dt                  # (B, S, H) <= 0
+
+    xc = xh.reshape(bs, nc, chunk, h, p)
+    dtc = dt.reshape(bs, nc, chunk, h)
+    dac = da.reshape(bs, nc, chunk, h)
+    bc = b.reshape(bs, nc, chunk, n)
+    cc = c.reshape(bs, nc, chunk, n)
+
+    cum = jnp.cumsum(dac, axis=2)                             # (B,nc,Q,H)
+    total = cum[:, :, -1:, :]                                 # (B,nc,1,H)
+
+    # --- intra-chunk (quadratic within chunk) ---
+    # L[i,j] = exp(cum_i - cum_j) for i >= j else 0
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]        # (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(li), 0.0)
+    # scores[i,j] = c_i · b_j
+    scores = jnp.einsum("bgin,bgjn->bgij", cc, bc)            # (B,nc,Q,Q)
+    op = scores[..., None] * decay                            # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bgijh,bgjh,bgjhp->bgihp", op, dtc, xc)
+
+    # --- inter-chunk state passing ---
+    # chunk-local state contribution: S_g = Σ_j exp(total - cum_j) dt_j b_j x_j^T
+    w = jnp.exp(total - cum) * dtc                            # (B,nc,Q,H)
+    s_loc = jnp.einsum("bgjh,bgjn,bgjhp->bghnp", w, bc, xc)   # (B,nc,H,N,P)
+
+    def scan_fn(state, inp):
+        s_g, tot_g = inp                                      # (B,H,N,P), (B,1,H)
+        out_state = state                                     # state BEFORE chunk
+        new_state = state * jnp.exp(tot_g)[:, 0, :, None, None] + s_g
+        return new_state, out_state
+
+    s_loc_t = jnp.moveaxis(s_loc, 1, 0)                       # (nc,B,H,N,P)
+    tot_t = jnp.moveaxis(total, 1, 0)                         # (nc,B,1,H)
+    init = jnp.zeros((bs, h, n, p), s_loc.dtype)
+    final_state, prev_states = jax.lax.scan(scan_fn, init, (s_loc_t, tot_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)             # (B,nc,H,N,P)
+
+    # contribution of carried state to each position in its chunk
+    y_inter = jnp.einsum("bgin,bgih,bghnp->bgihp",
+                         cc, jnp.exp(cum), prev_states)
+    y = (y_intra + y_inter).reshape(bs, s, h, p)
+    return y, final_state
+
+
+def mamba_apply(p: Params, x: jax.Array, cfg: ArchConfig,
+                chunk: int = CHUNK, return_state: bool = False):
+    """Mamba-2 block, full sequence. x: (B, S, d).
+
+    With ``return_state`` also returns the decode state after position S-1
+    (the SSD scan's final state + the conv tail), enabling exact
+    prefill→decode handoff.
+    """
+    bsz, s, d = x.shape
+    d_inner, nheads, head_dim = _mamba_dims(cfg)
+    n = cfg.ssm_state
+    chunk = min(chunk, s)
+
+    zxbcdt = x @ p["in_proj"]
+    z, xr, b, c, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n],
+        axis=-1)
+    # causal depthwise conv over (x, B, C)
+    xbc = jnp.concatenate([xr, b, c], axis=-1)
+    pad = jnp.pad(xbc, ((0, 0), (cfg.ssm_conv - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + s] * p["conv_w"][i][None, None]
+               for i in range(cfg.ssm_conv))
+    conv = jax.nn.silu(conv)
+    xr, b, c = jnp.split(conv, [d_inner, d_inner + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    xh = xr.reshape(bsz, s, nheads, head_dim).astype(jnp.float32)
+    y, final_state = _ssd_chunk_scan(xh, dt, b.astype(jnp.float32),
+                                     c.astype(jnp.float32), p["a_log"], chunk)
+    y = y + xh * p["d_skip"][None, None, :, None]
+    y = (y.reshape(bsz, s, d_inner) * jax.nn.silu(z.astype(jnp.float32))
+         ).astype(x.dtype)
+    out = y @ p["out_proj"]
+    if return_state:
+        tail = pad[:, s:, :]  # last (conv-1) raw xbc inputs
+        return out, {"ssm": final_state, "conv": tail.astype(jnp.float32)}
+    return out
+
+
+def mamba_init_state(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    d_inner, nheads, head_dim = _mamba_dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, nheads, cfg.ssm_state, head_dim), dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1,
+                           d_inner + 2 * cfg.ssm_state), dtype),
+    }
+
+
+def mamba_decode(p: Params, x: jax.Array, cfg: ArchConfig, state: Dict
+                 ) -> Tuple[jax.Array, Dict]:
+    """One-token Mamba-2 step. x: (B, 1, d)."""
+    bsz, _, d = x.shape
+    d_inner, nheads, head_dim = _mamba_dims(cfg)
+    n = cfg.ssm_state
+
+    zxbcdt = x[:, 0] @ p["in_proj"]
+    z, xr, b, c, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n],
+        axis=-1)
+    xbc = jnp.concatenate([xr, b, c], axis=-1)               # (B, D+2N)
+    conv_hist = jnp.concatenate([state["conv"], xbc[:, None]], axis=1)
+    conv = jnp.einsum("bkc,kc->bc", conv_hist.astype(jnp.float32),
+                      p["conv_w"].astype(jnp.float32))
+    conv = jax.nn.silu(conv)
+    xr, b, c = jnp.split(conv, [d_inner, d_inner + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B, H)
+    da = jnp.exp(-jnp.exp(p["a_log"])[None] * dt)                 # (B, H)
+    xh = xr.reshape(bsz, nheads, head_dim)
+    ssm = state["ssm"] * da[:, :, None, None] + jnp.einsum(
+        "bn,bh,bhp->bhnp", b, dt, xh)
+    y = jnp.einsum("bn,bhnp->bhp", c, ssm) + xh * p["d_skip"][None, :, None]
+    y = (y.reshape(bsz, d_inner) * jax.nn.silu(z.astype(jnp.float32))
+         ).astype(x.dtype)
+    out = (y @ p["out_proj"])[:, None]
+    return out, {"ssm": ssm, "conv": conv_hist[:, 1:]}
+
+
+# ===========================================================================
+# mLSTM (xLSTM matrix-memory block)
+# ===========================================================================
+
+def _mlstm_dims(cfg: ArchConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = cfg.num_heads
+    head_dim = d_inner // nheads
+    return d_inner, nheads, head_dim
+
+
+def mlstm_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    d_inner, nheads, head_dim = _mlstm_dims(cfg)
+    return {
+        "up_proj": ParamSpec((d, 2 * d_inner), ("embed", "mlp"),
+                             init="scaled_normal"),
+        "wq": ParamSpec((d_inner, d_inner), ("mlp", "q_proj"),
+                        init="scaled_normal"),
+        "wk": ParamSpec((d_inner, d_inner), ("mlp", "q_proj"),
+                        init="scaled_normal"),
+        "wv": ParamSpec((d_inner, d_inner), ("mlp", "q_proj"),
+                        init="scaled_normal"),
+        "w_i": ParamSpec((d_inner, nheads), ("mlp", "heads"),
+                         init="scaled_normal"),
+        "w_f": ParamSpec((d_inner, nheads), ("mlp", "heads"),
+                         init="scaled_normal"),
+        "f_bias": ParamSpec((nheads,), ("unsharded",), jnp.float32, "ones"),
+        "down_proj": ParamSpec((d_inner, d), ("mlp", "embed"),
+                               init="scaled_normal"),
+    }
+
+
+def mlstm_apply(p: Params, x: jax.Array, cfg: ArchConfig,
+                chunk: int = CHUNK, return_state: bool = False):
+    """mLSTM full-sequence path (chunkwise parallel, log-space stabilized).
+
+    Recurrence (per head):  C_t = f_t C_{t-1} + i_t v_t k_tᵀ;
+    n_t = f_t n_{t-1} + i_t k_t;  h_t = C_t q_t / max(|n_tᵀ q_t|, 1).
+    We form the equivalent attention-like computation with the decay matrix
+    D[t, j] = exp(logsum_f(t) - logsum_f(j) + log i_j) within chunks and a
+    scanned (C, n) state across chunks, all in log-stabilized float32.
+    """
+    bsz, s, d = x.shape
+    d_inner, nh, hd = _mlstm_dims(cfg)
+    chunk = min(chunk, s)
+    nc = s // chunk
+
+    up = x @ p["up_proj"]
+    xi, z = jnp.split(up, 2, axis=-1)
+    q = (xi @ p["wq"]).reshape(bsz, s, nh, hd).astype(jnp.float32)
+    k = (xi @ p["wk"]).reshape(bsz, s, nh, hd).astype(jnp.float32) / np.sqrt(hd)
+    v = (xi @ p["wv"]).reshape(bsz, s, nh, hd).astype(jnp.float32)
+    log_i = (xi @ p["w_i"]).astype(jnp.float32)               # (B,S,H)
+    log_f = jax.nn.log_sigmoid((xi @ p["w_f"]).astype(jnp.float32)
+                               + p["f_bias"])                 # (B,S,H) <= 0
+
+    qc = q.reshape(bsz, nc, chunk, nh, hd)
+    kc = k.reshape(bsz, nc, chunk, nh, hd)
+    vc = v.reshape(bsz, nc, chunk, nh, hd)
+    lic = log_i.reshape(bsz, nc, chunk, nh)
+    lfc = log_f.reshape(bsz, nc, chunk, nh)
+
+    cum_f = jnp.cumsum(lfc, axis=2)                           # (B,nc,Q,H)
+    tot_f = cum_f[:, :, -1, :]                                # (B,nc,H)
+
+    # intra-chunk decay: D[t,j] = cum_f[t] - lf[j]... precisely
+    # prod_{r=j+1..t} f_r * i_j  => cum_f[t] - cum_f[j] + log_i[j]
+    dmat = (cum_f[:, :, :, None, :] - cum_f[:, :, None, :, :]
+            + lic[:, :, None, :, :])                          # (B,nc,t,j,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    dmat = jnp.where(mask[None, None, :, :, None], dmat, -jnp.inf)
+    # stabilizer per (t): running max over j and inter-chunk part handled
+    # jointly below via m_state from the scan.
+    # inter-chunk: contribution exp(cum_f[t]) * C_prev q_t
+    # carry (C, n, m) where m is the running log-scale of C and n.
+
+    scores = jnp.einsum("bgthd,bgjhd->bgtjh", qc, kc)         # (B,nc,t,j,H)
+
+    # local state summaries for the scan (scaled by exp(tot_f - cum_f[j] + li_j))
+    w_log = tot_f[:, :, None, :] - cum_f + lic                # (B,nc,Q,H)
+    m_loc = jnp.max(w_log, axis=2)                            # (B,nc,H)
+    w = jnp.exp(w_log - m_loc[:, :, None, :])
+    c_loc = jnp.einsum("bgjh,bgjhd,bgjhe->bghde", w, kc, vc)  # (B,nc,H,hd,hd)
+    n_loc = jnp.einsum("bgjh,bgjhd->bghd", w, kc)             # (B,nc,H,hd)
+
+    def scan_fn(carry, inp):
+        c_st, n_st, m_st = carry
+        c_l, n_l, m_l, tf = inp
+        out = (c_st, n_st, m_st)
+        m_new = jnp.maximum(m_st + tf, m_l)
+        scale_old = jnp.exp(m_st + tf - m_new)
+        scale_new = jnp.exp(m_l - m_new)
+        c_n = c_st * scale_old[..., None, None] + c_l * scale_new[..., None, None]
+        n_n = n_st * scale_old[..., None] + n_l * scale_new[..., None]
+        return (c_n, n_n, m_new), out
+
+    init = (jnp.zeros((bsz, nh, hd, hd), jnp.float32),
+            jnp.zeros((bsz, nh, hd), jnp.float32),
+            jnp.full((bsz, nh), -1e30, jnp.float32))
+    xs = (jnp.moveaxis(c_loc, 1, 0), jnp.moveaxis(n_loc, 1, 0),
+          jnp.moveaxis(m_loc, 1, 0), jnp.moveaxis(tot_f, 1, 0))
+    final_carry, (c_prev, n_prev, m_prev) = jax.lax.scan(scan_fn, init, xs)
+    c_prev = jnp.moveaxis(c_prev, 0, 1)                       # (B,nc,H,hd,hd)
+    n_prev = jnp.moveaxis(n_prev, 0, 1)
+    m_prev = jnp.moveaxis(m_prev, 0, 1)                       # (B,nc,H)
+
+    # combine intra and inter with a joint stabilizer per (t)
+    m_intra = jnp.max(jnp.where(jnp.isfinite(dmat), dmat, -jnp.inf),
+                      axis=3)                                 # (B,nc,t,H)
+    m_inter = cum_f + m_prev[:, :, None, :]                   # (B,nc,t,H)
+    m_tot = jnp.maximum(m_intra, m_inter)
+    m_tot = jnp.maximum(m_tot, -1e30)
+
+    p_intra = jnp.exp(dmat - m_tot[:, :, :, None, :])
+    p_intra = jnp.where(mask[None, None, :, :, None], p_intra, 0.0)
+    h_intra = jnp.einsum("bgtjh,bgtjh,bgjhd->bgthd",
+                         scores, p_intra, vc)
+    # normalizer: n_t·q_t with the same intra/inter decomposition
+    nq_intra = jnp.einsum("bgtjh,bgtjh->bgth", scores, p_intra)
+    scale_inter = jnp.exp(m_inter - m_tot)                    # (B,nc,t,H)
+    h_inter = jnp.einsum("bgthd,bghde,bgth->bgthe", qc, c_prev, scale_inter)
+    nq_inter = jnp.einsum("bgthd,bghd,bgth->bgth", qc, n_prev, scale_inter)
+
+    denom = jnp.maximum(jnp.abs(nq_intra + nq_inter),
+                        jnp.exp(-m_tot))                      # max(|nᵀq|, 1)·e^-m
+    h = (h_intra + h_inter) / denom[..., None]
+    h = h.reshape(bsz, s, nh, hd).reshape(bsz, s, d_inner)
+
+    out = (h * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = out @ p["down_proj"]
+    if return_state:
+        cf, nf, mf = final_carry
+        return out, {"c": cf, "n": nf, "m": mf}
+    return out
+
+
+def mlstm_init_state(cfg: ArchConfig, batch: int):
+    d_inner, nh, hd = _mlstm_dims(cfg)
+    return {
+        "c": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, nh, hd), jnp.float32),
+        "m": jnp.full((batch, nh), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(p: Params, x: jax.Array, cfg: ArchConfig, state: Dict
+                 ) -> Tuple[jax.Array, Dict]:
+    """One-token mLSTM step (exact recurrent form)."""
+    bsz, _, d = x.shape
+    d_inner, nh, hd = _mlstm_dims(cfg)
+    up = x[:, 0] @ p["up_proj"]
+    xi, z = jnp.split(up, 2, axis=-1)
+    q = (xi @ p["wq"]).reshape(bsz, nh, hd).astype(jnp.float32)
+    k = (xi @ p["wk"]).reshape(bsz, nh, hd).astype(jnp.float32) / np.sqrt(hd)
+    v = (xi @ p["wv"]).reshape(bsz, nh, hd).astype(jnp.float32)
+    log_i = (xi @ p["w_i"]).astype(jnp.float32)               # (B,H)
+    log_f = jax.nn.log_sigmoid((xi @ p["w_f"]).astype(jnp.float32)
+                               + p["f_bias"])
+
+    m_new = jnp.maximum(state["m"] + log_f, log_i)
+    sc_old = jnp.exp(state["m"] + log_f - m_new)
+    sc_new = jnp.exp(log_i - m_new)
+    c = state["c"] * sc_old[..., None, None] + \
+        sc_new[..., None, None] * jnp.einsum("bhd,bhe->bhde", k, v)
+    n = state["n"] * sc_old[..., None] + sc_new[..., None] * k
+
+    nq = jnp.einsum("bhd,bhd->bh", n, q)
+    denom = jnp.maximum(jnp.abs(nq), jnp.exp(-m_new))
+    h = jnp.einsum("bhd,bhde->bhe", q, c) / denom[..., None]
+    h = h.reshape(bsz, d_inner)
+    out = (h * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return (out @ p["down_proj"])[:, None], {"c": c, "n": n, "m": m_new}
+
+
+# ===========================================================================
+# sLSTM (xLSTM scalar-memory block) — strictly sequential scan
+# ===========================================================================
+
+def slstm_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    nh = cfg.num_heads
+    hd = d // nh
+    return {
+        "w_gates": ParamSpec((d, 4 * d), ("embed", "mlp"),
+                             init="scaled_normal"),
+        # block-diagonal recurrent weights: per head (hd -> 4·hd).
+        # Deliberately REPLICATED (no TP axes): the sLSTM time-scan is
+        # sequential, and sharding the recurrent matmul would insert one
+        # collective per timestep (measured: 98k all-reduces per train
+        # step) — replicating ~4·d·hd params keeps the scan body local.
+        "r_gates": ParamSpec((nh, hd, 4 * hd), ("heads", None, None),
+                             init="scaled_normal"),
+        "b_gates": ParamSpec((4 * d,), (None,), jnp.float32, "zeros"),
+        "out_proj": ParamSpec((d, d), ("embed", "q_proj"),
+                              init="scaled_normal"),
+    }
+
+
+def _slstm_step(p, cfg, carry, xw):
+    """carry: (h, c, n, m) each (B, NH, hd); xw: (B, 4d) input gates preact."""
+    h_prev, c_prev, n_prev, m_prev = carry
+    bsz = h_prev.shape[0]
+    nh = cfg.num_heads
+    hd = cfg.d_model // nh
+    rec = jnp.einsum("bhd,hde->bhe", h_prev, p["r_gates"])    # (B,NH,4hd)
+    gates = xw.reshape(bsz, nh, 4 * hd) + rec + \
+        p["b_gates"].reshape(nh, 4 * hd)
+    zi, fi, ii, oi = jnp.split(gates, 4, axis=-1)
+    z = jnp.tanh(zi)
+    o = jax.nn.sigmoid(oi)
+    log_f = jax.nn.log_sigmoid(fi)
+    m_new = jnp.maximum(log_f + m_prev, ii)
+    i_g = jnp.exp(ii - m_new)
+    f_g = jnp.exp(log_f + m_prev - m_new)
+    c_new = f_g * c_prev + i_g * z
+    n_new = f_g * n_prev + i_g
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (h_new, c_new, n_new, m_new)
+
+
+def _slstm_scan(r_gates: jax.Array, b_gates: jax.Array, xw: jax.Array,
+                nh: int):
+    """Core sLSTM recurrence: xw (B,S,4d) -> hs (B,S,NH,hd), final carry."""
+    bsz, s, _ = xw.shape
+    hd = xw.shape[-1] // (4 * nh)
+
+    def step(carry, xt):
+        h_prev, c_prev, n_prev, m_prev = carry
+        rec = jnp.einsum("bhd,hde->bhe", h_prev, r_gates)
+        gates = xt.reshape(bsz, nh, 4 * hd) + rec + \
+            b_gates.reshape(nh, 4 * hd)
+        zi, fi, ii, oi = jnp.split(gates, 4, axis=-1)
+        z = jnp.tanh(zi)
+        o = jax.nn.sigmoid(oi)
+        log_f = jax.nn.log_sigmoid(fi)
+        m_new = jnp.maximum(log_f + m_prev, ii)
+        i_g = jnp.exp(ii - m_new)
+        f_g = jnp.exp(log_f + m_prev - m_new)
+        c_new = f_g * c_prev + i_g * z
+        n_new = f_g * n_prev + i_g
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    zero = jnp.zeros((bsz, nh, hd), jnp.float32)
+    init = (zero, zero, zero, jnp.full((bsz, nh, hd), -1e30, jnp.float32))
+    final, hs = jax.lax.scan(step, init, jnp.moveaxis(xw, 1, 0))
+    return jnp.moveaxis(hs, 0, 1), final
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _slstm_scan_cv(r_gates, b_gates, xw, nh):
+    hs, _ = _slstm_scan(r_gates, b_gates, xw, nh)
+    return hs
+
+
+def _slstm_scan_fwd(r_gates, b_gates, xw, nh):
+    hs, _ = _slstm_scan(r_gates, b_gates, xw, nh)
+    return hs, (r_gates, b_gates, xw, hs)
+
+
+def _slstm_scan_bwd(nh, res, g_hs):
+    """Reverse scan with LOCAL weight-gradient accumulation.
+
+    The naive autodiff of the forward scan psums the (tiny) per-timestep
+    dL/dr_gates across the data axis EVERY step — measured 98k all-reduces
+    per train step (437 GB/chip).  Here the gradient accumulates in the
+    scan carry (local to each shard) and is reduced ONCE when the final
+    value meets the replicated parameter.
+    """
+    r_gates, b_gates, xw, hs = res
+    bsz, s, _ = xw.shape
+    hd = xw.shape[-1] // (4 * nh)
+
+    # recompute per-step carries by replaying forward (cheap scalar ops;
+    # avoids storing 4 carries × S) — standard RNN-bwd recompute.
+    def fwd_step(carry, xt):
+        new, h = _slstm_scan_step_inline(carry, xt, r_gates, b_gates, nh,
+                                         bsz, hd)
+        return new, carry          # emit the PREVIOUS carry (input state)
+
+    zero = jnp.zeros((bsz, nh, hd), jnp.float32)
+    init = (zero, zero, zero, jnp.full((bsz, nh, hd), -1e30, jnp.float32))
+    _, prev_carries = jax.lax.scan(fwd_step, init,
+                                   jnp.moveaxis(xw, 1, 0))
+
+    # Broadcast the (replicated) weights to a per-example leading dim: the
+    # per-step weight cotangent then keeps the batch dim UNREDUCED, so the
+    # accumulator carry stays batch-sharded (local adds, zero collectives
+    # inside the loop) and is summed over batch ONCE after the scan — one
+    # small psum instead of one per timestep.
+    r_b = jnp.broadcast_to(r_gates, (bsz,) + r_gates.shape)
+    b_b = jnp.broadcast_to(b_gates.reshape(nh, 4 * hd),
+                           (bsz, nh, 4 * hd))
+
+    def f_be(carry, xt_, r_, b_):
+        """Step with per-example weights: r_ (B,nh,hd,4hd); b_ (B,nh,4hd)."""
+        h_prev, c_prev, n_prev, m_prev = carry
+        rec = jnp.einsum("bhd,bhde->bhe", h_prev, r_)
+        gates = xt_.reshape(bsz, nh, 4 * hd) + rec + b_
+        zi, fi, ii, oi = jnp.split(gates, 4, axis=-1)
+        z = jnp.tanh(zi)
+        o = jax.nn.sigmoid(oi)
+        log_f = jax.nn.log_sigmoid(fi)
+        m_new = jnp.maximum(log_f + m_prev, ii)
+        i_g = jnp.exp(ii - m_new)
+        f_g = jnp.exp(log_f + m_prev - m_new)
+        c_new = f_g * c_prev + i_g * z
+        n_new = f_g * n_prev + i_g
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    def bwd_step2(acc, inp):
+        d_carry, dr_acc, db_acc = acc
+        xt, prev_carry, g_h = inp
+        _, vjp_fn = jax.vjp(f_be, prev_carry, xt, r_b, b_b)
+        # h_new feeds BOTH the next carry (d_carry[0]) and the emitted
+        # output (g_h); jax.vjp sums the two cotangent paths for us.
+        d_prev, d_xt, d_r, d_b = vjp_fn((d_carry, g_h))
+        return (d_prev, dr_acc + d_r, db_acc + d_b), d_xt
+
+    zero4 = (zero, zero, zero, zero)
+    init_acc = (zero4, jnp.zeros_like(r_b), jnp.zeros_like(b_b))
+    (d_carry, dr_b, db_b), d_xw = jax.lax.scan(
+        bwd_step2, init_acc,
+        (jnp.moveaxis(xw, 1, 0), prev_carries, jnp.moveaxis(g_hs, 1, 0)),
+        reverse=True)
+    return (dr_b.sum(0), db_b.sum(0).reshape(b_gates.shape),
+            jnp.moveaxis(d_xw, 0, 1))
+
+
+def _slstm_scan_step_inline(carry, xt, r_gates, b_gates, nh, bsz, hd):
+    """(carry, xt) -> (new_carry, h_new) — shared by fwd replay and vjp."""
+    h_prev, c_prev, n_prev, m_prev = carry
+    rec = jnp.einsum("bhd,hde->bhe", h_prev, r_gates)
+    gates = xt.reshape(bsz, nh, 4 * hd) + rec + b_gates.reshape(nh, 4 * hd)
+    zi, fi, ii, oi = jnp.split(gates, 4, axis=-1)
+    z = jnp.tanh(zi)
+    o = jax.nn.sigmoid(oi)
+    log_f = jax.nn.log_sigmoid(fi)
+    m_new = jnp.maximum(log_f + m_prev, ii)
+    i_g = jnp.exp(ii - m_new)
+    f_g = jnp.exp(log_f + m_prev - m_new)
+    c_new = f_g * c_prev + i_g * z
+    n_new = f_g * n_prev + i_g
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (h_new, c_new, n_new, m_new), h_new
+
+
+_slstm_scan_cv.defvjp(_slstm_scan_fwd, _slstm_scan_bwd)
+
+
+def slstm_apply(p: Params, x: jax.Array, cfg: ArchConfig,
+                return_state: bool = False):
+    """sLSTM full-sequence path (sequential lax.scan over time).
+
+    Uses a custom VJP whose backward accumulates the recurrent-weight
+    gradient locally in the reverse scan (one collective per step → one
+    collective per LAYER); see _slstm_scan_bwd.
+    """
+    bsz, s, d = x.shape
+    nh = cfg.num_heads
+    hd = d // nh
+    xw = (x @ p["w_gates"]).astype(jnp.float32)               # (B,S,4d)
+    # gather the gate pre-activations ONCE before the sequential scan so
+    # the per-timestep recurrence stays collective-free (see r_gates note)
+    from repro.launch.partition import constrain
+    xw = constrain(xw, ("batch", None, None))
+
+    r32 = p["r_gates"].astype(jnp.float32)
+    if return_state:
+        hs, final = _slstm_scan(r32, p["b_gates"], xw, nh)
+        h = hs.reshape(bsz, s, d).astype(x.dtype)
+        out = h @ p["out_proj"]
+        hf, cf, nf, mf = final
+        return out, {"h": hf, "c": cf, "n": nf, "m": mf}
+    hs = _slstm_scan_cv(r32, p["b_gates"], xw, nh)
+    h = hs.reshape(bsz, s, d).astype(x.dtype)
+    return h @ p["out_proj"]
+
+
+def slstm_init_state(cfg: ArchConfig, batch: int):
+    nh = cfg.num_heads
+    hd = cfg.d_model // nh
+    z = jnp.zeros((batch, nh, hd), jnp.float32)
+    return {"h": z, "c": z, "n": z,
+            "m": jnp.full((batch, nh, hd), -1e30, jnp.float32)}
+
+
+def slstm_decode(p: Params, x: jax.Array, cfg: ArchConfig, state: Dict
+                 ) -> Tuple[jax.Array, Dict]:
+    bsz = x.shape[0]
+    xw = (x[:, 0] @ p["w_gates"]).astype(jnp.float32)
+    carry = (state["h"], state["c"], state["n"], state["m"])
+    h, c, n, m = _slstm_step(p, cfg, carry, xw)
+    out = h.reshape(bsz, -1).astype(x.dtype) @ p["out_proj"]
+    return out[:, None], {"h": h, "c": c, "n": n, "m": m}

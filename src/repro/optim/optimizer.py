@@ -1,0 +1,181 @@
+"""Optimizers: AdamW, Adafactor (factored second moment), momentum SGD.
+
+Self-contained (no optax dependency).  Each optimizer exposes:
+
+* ``init(params)``           — state pytree (per-param dict of arrays);
+* ``state_specs(specs)``     — ParamSpec tree mirroring ``init`` so that
+  dry-runs can derive abstract state + shardings without allocating;
+* ``update(grads, state, params, step)`` — returns (new_params, new_state).
+
+All state is float32 regardless of param dtype (mixed-precision training);
+Adafactor factors the second moment over the last two dims of ≥2-D params,
+which is what lets the 123B/340B cells fit the v5e HBM budget.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.params import ParamSpec
+
+__all__ = ["Optimizer", "make_optimizer"]
+
+
+def _is_spec(x):
+    return isinstance(x, ParamSpec)
+
+
+def _is_state_dict(x):
+    return isinstance(x, dict) and all(isinstance(k, str) and k.startswith("_s_")
+                                       for k in x)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    lr: float
+    init: Callable[[Any], Any]
+    state_specs: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], Any]
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def _adamw(lr: float, b1=0.9, b2=0.95, eps=1e-8, wd=0.1) -> Optimizer:
+    def init(params):
+        return jax.tree.map(
+            lambda p: {"_s_m": jnp.zeros(p.shape, jnp.float32),
+                       "_s_v": jnp.zeros(p.shape, jnp.float32)}, params)
+
+    def state_specs(specs):
+        return jax.tree.map(
+            lambda s: {"_s_m": ParamSpec(s.shape, s.axes, jnp.float32, "zeros"),
+                       "_s_v": ParamSpec(s.shape, s.axes, jnp.float32, "zeros")},
+            specs, is_leaf=_is_spec)
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+
+        def upd(g, st, p):
+            g = g.astype(jnp.float32)
+            m = b1 * st["_s_m"] + (1 - b1) * g
+            v = b2 * st["_s_v"] + (1 - b2) * g * g
+            mhat = m / (1 - b1 ** t)
+            vhat = v / (1 - b2 ** t)
+            delta = mhat / (jnp.sqrt(vhat) + eps) + wd * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return new_p, {"_s_m": m, "_s_v": v}
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state)
+        out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_state = jax.tree.unflatten(treedef, [o[1] for o in out])
+        return new_params, new_state
+
+    return Optimizer("adamw", lr, init, state_specs, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (simplified: factored v, no relative step warmup bells)
+# ---------------------------------------------------------------------------
+
+def _adafactor(lr: float, decay=0.99, eps=1e-30, clip=1.0) -> Optimizer:
+    def _factored(shape) -> bool:
+        return len(shape) >= 2
+
+    def init(params):
+        def st(p):
+            if _factored(p.shape):
+                return {"_s_vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "_s_vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                           jnp.float32)}
+            return {"_s_v": jnp.zeros(p.shape, jnp.float32)}
+        return jax.tree.map(st, params)
+
+    def state_specs(specs):
+        def st(s):
+            if _factored(s.shape):
+                return {"_s_vr": ParamSpec(s.shape[:-1], s.axes[:-1],
+                                           jnp.float32, "zeros"),
+                        "_s_vc": ParamSpec(s.shape[:-2] + s.shape[-1:],
+                                           s.axes[:-2] + s.axes[-1:],
+                                           jnp.float32, "zeros")}
+            return {"_s_v": ParamSpec(s.shape, s.axes, jnp.float32, "zeros")}
+        return jax.tree.map(st, specs, is_leaf=_is_spec)
+
+    def update(grads, state, params, step):
+        def upd(g, st, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p.shape):
+                vr = decay * st["_s_vr"] + (1 - decay) * g2.mean(-1)
+                vc = decay * st["_s_vc"] + (1 - decay) * g2.mean(-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(-1)[..., None, None], eps))
+                upd_ = g * jax.lax.rsqrt(denom + eps)
+                new_st = {"_s_vr": vr, "_s_vc": vc}
+            else:
+                v = decay * st["_s_v"] + (1 - decay) * g2
+                upd_ = g * jax.lax.rsqrt(v + eps)
+                new_st = {"_s_v": v}
+            # update clipping by RMS
+            rms = jnp.sqrt(jnp.mean(upd_ * upd_) + 1e-30)
+            upd_ = upd_ / jnp.maximum(1.0, rms / clip)
+            new_p = (p.astype(jnp.float32) - lr * upd_).astype(p.dtype)
+            return new_p, new_st
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state)
+        out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        return (jax.tree.unflatten(treedef, [o[0] for o in out]),
+                jax.tree.unflatten(treedef, [o[1] for o in out]))
+
+    return Optimizer("adafactor", lr, init, state_specs, update)
+
+
+# ---------------------------------------------------------------------------
+# SGD + momentum
+# ---------------------------------------------------------------------------
+
+def _sgdm(lr: float, momentum=0.9) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda p: {"_s_m": jnp.zeros(p.shape, jnp.float32)},
+                            params)
+
+    def state_specs(specs):
+        return jax.tree.map(
+            lambda s: {"_s_m": ParamSpec(s.shape, s.axes, jnp.float32, "zeros")},
+            specs, is_leaf=_is_spec)
+
+    def update(grads, state, params, step):
+        def upd(g, st, p):
+            m = momentum * st["_s_m"] + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * m).astype(p.dtype), {"_s_m": m}
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state)
+        out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        return (jax.tree.unflatten(treedef, [o[0] for o in out]),
+                jax.tree.unflatten(treedef, [o[1] for o in out]))
+
+    return Optimizer("sgdm", lr, init, state_specs, update)
+
+
+def make_optimizer(name: str, lr: float = 1e-3) -> Optimizer:
+    if name == "adamw":
+        return _adamw(lr)
+    if name == "adafactor":
+        return _adafactor(lr)
+    if name == "sgdm":
+        return _sgdm(lr)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,57 @@
+"""Gradient coding: exact decode under every straggler pattern + balancing."""
+
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.gradient_coding import CyclicGradientCode
+
+
+@pytest.mark.parametrize("n,s", [(4, 1), (6, 2), (8, 2), (8, 3)])
+def test_every_pattern_decodes(n, s):
+    gc = CyclicGradientCode(n=n, s=s)
+    rng = np.random.default_rng(0)
+    g_parts = rng.standard_normal((n, 5))
+    coded = np.stack([
+        np.asarray(gc.encode_local(jnp.asarray(g_parts[gc.window(w)]),
+                                   jnp.int32(w)))
+        for w in range(n)])
+    want = g_parts.sum(0)
+    for dead in itertools.combinations(range(n), s):
+        live = [w for w in range(n) if w not in dead]
+        wts = gc.decode_weights(live)
+        got = (wts[:, None] * coded).sum(0)
+        # encode runs in f32; decode weights can amplify rounding by ~|a|
+        amp = max(np.abs(wts).max(), 1.0)
+        np.testing.assert_allclose(got, want, rtol=1e-4,
+                                   atol=3e-6 * amp * (s + 1))
+
+
+def test_zero_stragglers_identity():
+    gc = CyclicGradientCode(n=5, s=0)
+    np.testing.assert_allclose(gc.B, np.eye(5))
+
+
+def test_redundancy_factor():
+    """Each group computes exactly s+1 partitions (storage/compute cost)."""
+    gc = CyclicGradientCode(n=8, s=2)
+    assert all(len(gc.window(w)) == 3 for w in range(8))
+    assert (np.count_nonzero(gc.B, axis=1) == 3).all()
+
+
+def test_balanced_sizes():
+    gc = CyclicGradientCode(n=6, s=1)
+    speeds = np.array([1.0, 1.0, 0.2, 1.0, 1.0, 1.0])
+    sizes = gc.balanced_part_sizes(speeds, batch=240)
+    assert sizes.sum() == 240
+    assert (sizes > 0).all()
+    # partitions covered by the slow group get fewer examples
+    slow_covered = [2, 1]            # windows of groups 1,2 include p=2
+    assert sizes[2] < max(sizes)
+
+
+def test_invalid_params():
+    with pytest.raises(ValueError):
+        CyclicGradientCode(n=4, s=4)

@@ -1,0 +1,61 @@
+"""Polynomial coded computing (§5): exactness and any-m decode."""
+
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.polynomial import PolynomialCode
+
+
+def _setup(a=2, b=2, n=5, rows=24, ca=8, cb=6, seed=0):
+    pc = PolynomialCode(n=n, a=a, b=b)
+    rng = np.random.default_rng(seed)
+    am = jnp.asarray(rng.standard_normal((rows, ca)), jnp.float32)
+    bm = jnp.asarray(rng.standard_normal((rows, cb)), jnp.float32)
+    d = jnp.asarray(rng.uniform(0.5, 1.5, rows), jnp.float32)
+    return pc, am, bm, d
+
+
+class TestPolynomialCode:
+    def test_full_product_any_m_nodes(self):
+        pc, am, bm, d = _setup()
+        want = np.asarray(am).T @ (np.asarray(d)[:, None] * np.asarray(bm))
+        for nodes in itertools.combinations(range(5), 4):
+            got = pc.full_product(am, bm, d, nodes=list(nodes))
+            np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3,
+                                       atol=2e-3)
+
+    def test_a3_b3_twelve_nodes(self):
+        """The paper's Fig-12 configuration: a=b=3, n=12, any 9 decode."""
+        pc, am, bm, d = _setup(a=3, b=3, n=12, ca=9, cb=9, rows=30, seed=1)
+        want = np.asarray(am).T @ (np.asarray(d)[:, None] * np.asarray(bm))
+        got = pc.full_product(am, bm, d, nodes=[0, 2, 3, 5, 6, 7, 9, 10, 11])
+        np.testing.assert_allclose(np.asarray(got), want, rtol=5e-3,
+                                   atol=5e-3)
+
+    def test_not_enough_nodes_raises(self):
+        with pytest.raises(ValueError):
+            PolynomialCode(n=3, a=2, b=2)
+        pc = PolynomialCode(n=5, a=2, b=2)
+        with pytest.raises(ValueError):
+            pc.interp_matrix([0, 1, 2])
+
+    def test_integer_points_match_paper_encoding(self):
+        """points="integer": node i stores A0 + i·A1 (paper §5 example)."""
+        pc = PolynomialCode(n=5, a=2, b=2, points="integer")
+        am = jnp.asarray(np.random.default_rng(2).standard_normal((8, 4)),
+                         jnp.float32)
+        coded = pc.encode_a(am)
+        a0, a1 = np.split(np.asarray(am), 2, axis=1)
+        np.testing.assert_allclose(np.asarray(coded[0]), a0, rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(coded[2]), a0 + 2 * a1,
+                                   rtol=1e-5)
+
+    def test_without_diag(self):
+        pc, am, bm, _ = _setup()
+        got = pc.full_product(am, bm, None, nodes=[1, 2, 3, 4])
+        want = np.asarray(am).T @ np.asarray(bm)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3,
+                                   atol=2e-3)

@@ -1,0 +1,70 @@
+"""Roofline machinery: HLO collective parser with while-loop trip counts."""
+
+import numpy as np
+import pytest
+
+from repro.launch.roofline import (V5E, RooflineResult, collective_bytes,
+                                   _parse_shape_bytes, _ring_factor)
+
+SYNTH_HLO = """\
+%scan_cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]{1,0}) parameter(0)
+  %constant.1 = s32[] constant(10)
+  %gte = s32[] get-tuple-element(%p), index=0
+  ROOT %cmp = pred[] compare(%gte, %constant.1), direction=LT
+}
+
+%scan_body (p2: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p2 = (s32[], f32[8,8]{1,0}) parameter(0)
+  %x = f32[8,8]{1,0} get-tuple-element(%p2), index=1
+  %all-reduce.1 = f32[8,8]{1,0} all-reduce(%x), channel_id=1, replica_groups=[2,4]<=[8], to_apply=%add
+  ROOT %t = (s32[], f32[8,8]{1,0}) tuple(%gte2, %all-reduce.1)
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8]{1,0} parameter(0)
+  %all-gather.7 = f32[32,8]{1,0} all-gather(%a), channel_id=2, replica_groups=[2,4]<=[8], dimensions={0}
+  %while.1 = (s32[], f32[8,8]{1,0}) while(%init), condition=%scan_cond, body=%scan_body
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%while.1), index=1
+}
+"""
+
+
+def test_parse_shape_bytes():
+    assert _parse_shape_bytes(" f32[8,8]{1,0} ") == 256
+    assert _parse_shape_bytes("(bf16[4,2]{1,0}, f32[3]) ") == 16 + 12
+    assert _parse_shape_bytes(" s32[] ") == 4
+
+
+def test_ring_factors():
+    # all-reduce moves 2(k-1)/k of the tensor
+    assert _ring_factor("all-reduce", 4, 100) == pytest.approx(150.0)
+    assert _ring_factor("all-gather", 4, 100) == pytest.approx(75.0)
+    assert _ring_factor("reduce-scatter", 4, 100) == pytest.approx(300.0)
+    assert _ring_factor("collective-permute", 4, 100) == 100.0
+    assert _ring_factor("all-reduce", 1, 100) == 0.0
+
+
+def test_trip_count_multiplier():
+    """The all-reduce inside the 10-trip while body counts 10×."""
+    out = collective_bytes(SYNTH_HLO)
+    # all-reduce: 256 bytes × 2·(3/4) × 10 trips = 3840
+    assert out["all-reduce"] == pytest.approx(256 * 1.5 * 10)
+    # all-gather at top level: 32*8*4 = 1024 bytes × 3/4 = 768
+    assert out["all-gather"] == pytest.approx(1024 * 0.75)
+
+
+def test_roofline_result_terms():
+    r = RooflineResult(
+        arch="x", shape="train_4k", mesh="pod", chips=256,
+        flops_per_chip=197e12 * 0.5,          # half a second of compute
+        bytes_per_chip=819e9 * 0.1,
+        coll_bytes_per_chip=50e9 * 0.2,
+        coll_breakdown={}, peak_mem_per_chip=8e9,
+        model_flops_total=197e12 * 0.4 * 256)
+    assert r.t_compute == pytest.approx(0.5)
+    assert r.t_memory == pytest.approx(0.1)
+    assert r.t_collective == pytest.approx(0.2)
+    assert r.dominant == "compute"
+    assert r.roofline_fraction == pytest.approx(0.8)
+    assert r.useful_flops_fraction == pytest.approx(0.8)

@@ -1,0 +1,117 @@
+"""S²C² allocation invariants (Algorithm 1) — including hypothesis
+property tests of the decodability (coverage ≥ k) guarantee."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.s2c2 import (allocation_masks, basic_allocation,
+                             expected_makespan, general_allocation,
+                             general_allocation_jax)
+
+
+class TestBasic:
+    def test_no_stragglers_equal_split(self):
+        al = basic_allocation(n=12, k=10, chunks=60)
+        assert al.count.sum() == 10 * 60
+        cov = al.coverage()
+        assert cov.min() == cov.max() == 10
+
+    def test_straggler_gets_zero(self):
+        al = basic_allocation(12, 10, 60, stragglers=[3, 7])
+        assert al.count[3] == al.count[7] == 0
+        assert (al.coverage() >= 10).all()
+
+    def test_too_many_stragglers_raise(self):
+        with pytest.raises(ValueError):
+            basic_allocation(12, 10, 60, stragglers=[0, 1, 2])
+
+    def test_ns_equivalence(self):
+        """With n−s stragglers, per-live-worker work == (n,s)-MDS load D/s."""
+        n, k, chunks = 12, 10, 55
+        al = basic_allocation(n, k, chunks, stragglers=[11])
+        live = al.count[al.count > 0]
+        expect = k * chunks / 11    # (12,11)-MDS per-worker chunks
+        assert abs(live.mean() - expect) < 1.0
+
+
+class TestGeneral:
+    def test_proportionality(self):
+        speeds = [4.0, 2.0, 1.0, 1.0]
+        al = general_allocation(speeds, k=2, chunks=40)
+        # fastest gets capped at chunks; ordering preserved
+        assert al.count[0] >= al.count[1] >= al.count[2]
+        assert (al.coverage() >= 2).all()
+
+    def test_cap_spills_to_next(self):
+        # one very fast worker cannot exceed its partition size
+        al = general_allocation([100.0, 1.0, 1.0], k=2, chunks=30)
+        assert al.count[0] == 30
+        assert al.count.sum() == 60
+
+    def test_zero_speed_worker(self):
+        al = general_allocation([1.0, 1.0, 1.0, 0.0], k=2, chunks=30)
+        assert al.count[3] == 0
+        assert (al.coverage() >= 2).all()
+
+    def test_infeasible_raises(self):
+        with pytest.raises(ValueError):
+            general_allocation([1.0, 0.0, 0.0], k=2, chunks=30)
+
+    def test_makespan_equalized(self):
+        """Alg-1 allocations finish near-simultaneously under true speeds."""
+        speeds = np.array([1.0, 0.9, 0.8, 0.5, 0.3])
+        al = general_allocation(speeds, k=3, chunks=100)
+        t = al.count / speeds
+        active = al.count > 0
+        assert t[active].max() / t[active].min() < 1.35
+
+
+@given(
+    st.integers(3, 14).flatmap(
+        lambda n: st.tuples(
+            st.just(n),
+            st.integers(1, n - 1),
+            st.lists(st.floats(0.01, 10.0), min_size=n, max_size=n),
+            st.integers(10, 80),
+        )))
+@settings(max_examples=80, deadline=None)
+def test_coverage_invariant_property(args):
+    """THE paper invariant: every chunk index covered by ≥ k workers, total
+    work == k·C, per-worker work ≤ C — for arbitrary speeds."""
+    n, k, speeds, chunks = args
+    al = general_allocation(speeds, k=k, chunks=chunks)
+    cov = al.coverage()
+    assert (cov >= k).all()
+    assert al.count.sum() == k * chunks
+    assert (al.count <= chunks).all()
+    # cyclic placement covers every index EXACTLY k times
+    assert (cov == k).all()
+
+
+@given(
+    st.integers(3, 10).flatmap(
+        lambda n: st.tuples(
+            st.just(n),
+            st.integers(1, n - 1),
+            st.lists(st.floats(0.05, 5.0), min_size=n, max_size=n),
+        )))
+@settings(max_examples=40, deadline=None)
+def test_jax_allocator_matches_invariants(args):
+    """Device-side allocator preserves Σ=k·C, cap, and coverage ≥ k."""
+    n, k, speeds = args
+    chunks = 48
+    begin, count = general_allocation_jax(jnp.asarray(speeds, jnp.float32),
+                                          k, chunks)
+    begin, count = np.asarray(begin), np.asarray(count)
+    assert count.sum() == k * chunks
+    assert (count <= chunks).all()
+    masks = allocation_masks(begin, count, chunks)
+    assert (masks.sum(0) >= k).all()
+
+
+def test_expected_makespan():
+    al = general_allocation([1.0, 1.0], k=1, chunks=10)
+    t = expected_makespan(al, [1.0, 1.0], rows_per_chunk=10, row_cost=0.1)
+    assert t == pytest.approx(5.0, rel=0.2)

@@ -1,0 +1,117 @@
+"""End-to-end behaviour tests: the paper's applications running on the
+coded-computing stack (real algebra + simulated latency), exercising the
+full pipeline data → encode → S²C² schedule → compute → decode → iterate."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.coding import MDSCode
+from repro.core.s2c2 import general_allocation
+from repro.core.simulation import LOCAL_CLUSTER, simulate_run
+from repro.core.strategies import GeneralS2C2, MDSCoded
+from repro.core.traces import controlled_traces
+from repro.data.pipeline import (laplacian_matrix, make_graph,
+                                 make_lr_dataset)
+
+
+def coded_matvec_host(code: MDSCode, coded, x, speeds, chunks=12):
+    """Host-side coded matvec under an S²C² allocation (any-k per chunk)."""
+    alloc = general_allocation(speeds, code.k, chunks)
+    masks = alloc.masks()
+    weights = code.chunk_decode_weights(masks.T)
+    rows = coded.shape[1]
+    rpc = rows // chunks
+    partials = np.einsum("nrd,d->nr", np.asarray(coded, np.float64),
+                         np.asarray(x, np.float64))
+    partials = partials.reshape(code.n, chunks, rpc) * masks[:, :, None]
+    dec = np.einsum("ckn,ncr->ckr", weights, partials)
+    return np.transpose(dec, (1, 0, 2)).reshape(-1)
+
+
+class TestCodedLogisticRegression:
+    """Gradient descent for LR where the Ax matvec runs coded."""
+
+    def test_convergence_matches_uncoded(self):
+        a, y, _ = make_lr_dataset(rows=240, cols=16, seed=0)
+        code = MDSCode(n=6, k=4)
+        chunks = 12
+        coded = np.asarray(code.encode(jnp.asarray(a)))    # (6, 60, 16)
+        w = np.zeros(16)
+        w_ref = np.zeros(16)
+        lr = 0.5 / a.shape[0]
+        speeds = np.array([1, 1, 0.9, 0.8, 0.3, 1.0])
+        for it in range(30):
+            # coded path
+            ax = coded_matvec_host(code, coded, w, speeds, chunks)[: a.shape[0]]
+            margin = y * ax
+            g_scale = -y / (1 + np.exp(margin))
+            grad = a.T @ g_scale
+            w -= lr * grad
+            # reference
+            m2 = y * (a @ w_ref)
+            w_ref -= lr * (a.T @ (-y / (1 + np.exp(m2))))
+        np.testing.assert_allclose(w, w_ref, rtol=1e-4, atol=1e-6)
+        acc = ((a @ w > 0) * 2 - 1 == y).mean()
+        assert acc > 0.8
+
+
+class TestCodedPageRank:
+    def test_power_iteration_exact(self):
+        adj = make_graph(120, 6, seed=1)
+        # column-normalized transition matrix; dangling nodes -> uniform
+        col = adj.sum(0, keepdims=True)
+        m = adj / np.maximum(col, 1)
+        dangling = (col[0] == 0)
+        m[:, dangling] = 1.0 / 120
+        code = MDSCode(n=5, k=3)
+        coded = np.asarray(code.encode(jnp.asarray(m, jnp.float32)))
+        r = np.ones(120) / 120
+        r_ref = r.copy()
+        d = 0.85
+        speeds = np.array([1, 1, 1, 0.2, 0.9])
+        for _ in range(15):
+            mr = coded_matvec_host(code, coded, r, speeds, chunks=10)[:120]
+            r = (1 - d) / 120 + d * mr
+            r_ref = (1 - d) / 120 + d * (m @ r_ref)
+        np.testing.assert_allclose(r, r_ref, rtol=1e-3, atol=1e-7)
+        assert r.sum() == pytest.approx(1.0, rel=1e-2)
+
+
+class TestCodedGraphFiltering:
+    def test_nhop_filter(self):
+        adj = make_graph(96, 5, seed=2)
+        lap = laplacian_matrix(adj)
+        code = MDSCode(n=4, k=3)
+        coded = np.asarray(code.encode(jnp.asarray(lap, jnp.float32)))
+        x = np.random.default_rng(0).standard_normal(96)
+        want = x.copy()
+        got = x.copy()
+        for _ in range(3):               # 3-hop filtering
+            want = lap @ want
+            got = coded_matvec_host(code, coded, got,
+                                    np.array([1, 1, 0.5, 1.0]), chunks=8)[:96]
+        np.testing.assert_allclose(got, want, rtol=1e-2, atol=1e-2)
+
+
+class TestPaperHeadlineNumbers:
+    """Latency claims validated in the simulated cloud (§7.2 conditions)."""
+
+    def test_39pct_gain_low_misprediction(self):
+        """(10,7)-S²C² vs (10,7)-MDS with all-fast workers: the paper
+        reports 39.3% (max 42.8%); our simulated cloud should land 30-45%
+        by the paper's (T_mds - T_s2c2)/T_s2c2 convention."""
+        tr = controlled_traces(10, 15, n_stragglers=0,
+                               nonstraggler_variation=0.05, seed=11)
+        mds = simulate_run(MDSCoded(10, 7, 600000), tr, LOCAL_CLUSTER)
+        s2 = simulate_run(GeneralS2C2(10, 7, 600000), tr, LOCAL_CLUSTER)
+        gain = (mds.mean_time - s2.mean_time) / s2.mean_time
+        assert 0.30 < gain < 0.45, gain
+
+    def test_mds_wasted_computation_vs_s2c2(self):
+        """Fig 11: conventional MDS incurs ≫ wasted computation vs S²C²."""
+        tr = controlled_traces(10, 15, n_stragglers=1, seed=5)
+        mds = simulate_run(MDSCoded(10, 7, 600000), tr, LOCAL_CLUSTER)
+        s2 = simulate_run(GeneralS2C2(10, 7, 600000), tr, LOCAL_CLUSTER)
+        assert mds.per_worker_wasted.sum() > 1.4 * s2.per_worker_wasted.sum()
