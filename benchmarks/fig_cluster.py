@@ -1,0 +1,137 @@
+"""Cluster-engine benchmarks: executed vs simulated makespan, strategy
+sweep under every slowdown injector, and the JobService load test.
+
+Three sections:
+
+* ``exec_vs_sim``   — same trace through the real engine and the
+  time-equation simulator; reports both mean iteration makespans and their
+  ratio (how faithful the closed-form model is to real events);
+* ``sweep``         — all four strategies under trace-driven, bursty, and
+  fail-stop injectors (mean executed makespan per round);
+* ``service``       — ≥100 queued heterogeneous jobs through the
+  JobService: per-strategy throughput, p50/p99 latency, wasted fraction.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Csv
+from repro.cluster import (BurstyInjector, ClusterConfig,
+                           CodedExecutionEngine, FailStopInjector, JobService,
+                           MatvecJob, PageRankJob, RegressionJob,
+                           TraceInjector, replica_placement)
+from repro.core.simulation import CostModel, simulate_run
+from repro.core.strategies import (BasicS2C2, GeneralS2C2, MDSCoded,
+                                   UncodedReplication)
+from repro.core.traces import controlled_traces
+
+N, K, CHUNKS, D = 12, 6, 30, 3600
+ROW_COST = 2e-4
+ITERS = 6
+
+
+def _strategies():
+    return {"uncoded-3rep": UncodedReplication(N, D),
+            "mds": MDSCoded(N, K, D),
+            "basic-s2c2": BasicS2C2(N, K, D, chunks=CHUNKS),
+            "general-s2c2": GeneralS2C2(N, K, D, chunks=CHUNKS)}
+
+
+def _run_engine(strategy, injector, a, x, iters=ITERS):
+    eng = CodedExecutionEngine(
+        ClusterConfig(n_workers=N, k=K, row_cost=ROW_COST),
+        injector=injector)
+    try:
+        if isinstance(strategy, UncodedReplication):
+            data = eng.load_replicated(a, replica_placement(N, 3, seed=1))
+        else:
+            data = eng.load_matrix(a, chunks=CHUNKS)
+        ms, wasted, useful = [], 0.0, 0.0
+        for _ in range(iters):
+            out = eng.matvec(data, x, strategy)
+            ms.append(out.metrics.makespan)
+            wasted += out.metrics.total_wasted
+            useful += out.metrics.total_useful
+        return float(np.mean(ms[1:])), wasted / max(useful + wasted, 1e-9)
+    finally:
+        eng.shutdown()
+
+
+def exec_vs_sim(csv: Csv, a, x) -> None:
+    traces = controlled_traces(N, ITERS + 2, n_stragglers=2, seed=7)
+    cost = CostModel(row_cost=ROW_COST, net_bw=1e12, net_latency=1e-7,
+                     decode_cost_per_row=0, assemble_cost_per_row=0)
+    for name, strat in _strategies().items():
+        sim = simulate_run(strat, traces, cost).mean_time
+        real, _ = _run_engine(strat, TraceInjector(traces), a, x)
+        csv.add(f"cluster/exec_vs_sim/{name}", real * 1e6,
+                f"sim_us={sim * 1e6:.0f} ratio={real / sim:.2f}")
+
+
+def sweep(csv: Csv, a, x) -> None:
+    injectors = {
+        "trace2strag": lambda: TraceInjector(
+            controlled_traces(N, ITERS + 2, n_stragglers=2, seed=11)),
+        "bursty": lambda: BurstyInjector(N, slowdown=5.0, seed=5),
+        "failstop": lambda: FailStopInjector({N - 1: 2}),
+    }
+    for iname, mk_inj in injectors.items():
+        for sname, strat in _strategies().items():
+            real, wfrac = _run_engine(strat, mk_inj(), a, x)
+            csv.add(f"cluster/sweep/{iname}/{sname}", real * 1e6,
+                    f"wasted_frac={wfrac:.3f}")
+
+
+def service_bench(csv: Csv) -> None:
+    n, k, chunks, d = 6, 4, 8, 192
+    rng = np.random.default_rng(3)
+    eng = CodedExecutionEngine(
+        ClusterConfig(n_workers=n, k=k, row_cost=1e-6),
+        injector=BurstyInjector(n, slowdown=4.0, seed=9))
+    svc = JobService(eng, max_queue=256)
+    try:
+        strats = [GeneralS2C2(n, k, d, chunks=chunks),
+                  BasicS2C2(n, k, d, chunks=chunks),
+                  MDSCoded(n, k, d),
+                  UncodedReplication(n, d)]
+        n_jobs = 120
+        for i in range(n_jobs):
+            strat = strats[i % 4]
+            kind = i % 3
+            if kind == 0:
+                a = rng.standard_normal((d, 24))
+                job = MatvecJob(a, [rng.standard_normal(24)
+                                    for _ in range(3)], strat, chunks=chunks)
+            elif kind == 1:
+                m = rng.random((d, d))
+                m /= m.sum(0, keepdims=True)
+                job = PageRankJob(m, strat, iters=3, chunks=chunks)
+            else:
+                a = rng.standard_normal((d, 12))
+                y = np.sign(a @ rng.standard_normal(12))
+                job = RegressionJob(a, y, strat, epochs=3, chunks=chunks)
+            svc.submit(job)
+        svc.drain(timeout=600)
+        rep = svc.report()
+        csv.add("cluster/service/all", rep.p50_latency * 1e6,
+                f"jobs={rep.n_jobs} jobs_per_s={rep.jobs_per_s:.1f} "
+                f"p99_us={rep.p99_latency * 1e6:.0f} "
+                f"wasted={rep.wasted_fraction:.3f}")
+        for sname, s in rep.by_strategy.items():
+            csv.add(f"cluster/service/{sname}", s["p50_latency"] * 1e6,
+                    f"jobs={s['jobs']:.0f} jobs_per_s={s['jobs_per_s']:.2f} "
+                    f"p99_us={s['p99_latency'] * 1e6:.0f} "
+                    f"wasted={s['wasted_fraction']:.3f}")
+    finally:
+        svc.close()
+        eng.shutdown()
+
+
+def main(csv: Csv) -> None:
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((D, 48))
+    x = rng.standard_normal(48)
+    exec_vs_sim(csv, a, x)
+    sweep(csv, a, x)
+    service_bench(csv)

@@ -18,6 +18,7 @@ MODULES = [
     ("fig6+7", "benchmarks.fig_controlled"),
     ("fig8-11", "benchmarks.fig_cloud"),
     ("fig12", "benchmarks.fig_polynomial"),
+    ("cluster", "benchmarks.fig_cluster"),
     ("kernels", "benchmarks.kernel_bench"),
     ("roofline", "benchmarks.roofline_bench"),
 ]

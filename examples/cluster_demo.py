@@ -1,0 +1,94 @@
+"""Quickstart for the concurrent coded-execution engine (repro.cluster).
+
+Spins up an in-process 10-worker cluster with a trace-driven straggler
+injector, runs the same PageRank power iteration under GeneralS2C2 and the
+(n, k)-MDS baseline on *real* worker threads (chunk-level any-k collection,
+§4.3 timeout/reassign), then pushes a small heterogeneous job mix through
+the multi-tenant JobService and prints the service report.
+
+Run:  PYTHONPATH=src python examples/cluster_demo.py
+"""
+
+import numpy as np
+
+from repro.cluster import (ClusterConfig, CodedExecutionEngine, JobService,
+                           MatvecJob, PageRankJob, RegressionJob,
+                           TraceInjector)
+from repro.core.strategies import GeneralS2C2, MDSCoded
+from repro.core.traces import controlled_traces
+
+N_WORKERS, K, CHUNKS = 10, 8, 20
+D = 2400
+
+
+def make_stochastic(n: int, seed: int = 1) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    adj = (rng.random((n, n)) < 12.0 / n).astype(np.float64)
+    col = adj.sum(0, keepdims=True)
+    m = adj / np.maximum(col, 1)
+    m[:, col[0] == 0] = 1.0 / n
+    return m
+
+
+def main() -> int:
+    m = make_stochastic(D)
+    traces = controlled_traces(N_WORKERS, 60, n_stragglers=2, seed=7)
+    eng = CodedExecutionEngine(
+        ClusterConfig(n_workers=N_WORKERS, k=K, row_cost=5e-5),
+        injector=TraceInjector(traces))
+    try:
+        data = eng.load_matrix(m, chunks=CHUNKS)
+        r_ref = np.ones(D) / D
+        for _ in range(15):
+            r_ref = 0.15 / D + 0.85 * (m @ r_ref)
+
+        print(f"{N_WORKERS}-worker engine, (n,k)=({N_WORKERS},{K}), "
+              f"2 injected 5x stragglers")
+        for name, strat in (
+                ("general-s2c2", GeneralS2C2(N_WORKERS, K, D, chunks=CHUNKS)),
+                ("mds-baseline", MDSCoded(N_WORKERS, K, D))):
+            r = np.ones(D) / D
+            ms, waves, wasted = [], 0, 0.0
+            for _ in range(15):
+                out = eng.matvec(data, r, strat)
+                r = 0.15 / D + 0.85 * out.y[:D]
+                ms.append(out.metrics.makespan)
+                waves += out.metrics.reassign_waves
+                wasted += out.metrics.total_wasted
+            err = np.abs(r - r_ref).max() / r_ref.max()
+            print(f"  [{name}] mean_iter={np.mean(ms[1:]) * 1e3:6.1f}ms "
+                  f"reassign_waves={waves} wasted_rows={wasted:8.0f} "
+                  f"pagerank_rel_err={err:.2e}")
+            assert err < 1e-6
+
+        # multi-tenant service: a burst of heterogeneous jobs
+        svc = JobService(eng, max_queue=64)
+        rng = np.random.default_rng(0)
+        try:
+            for i in range(24):
+                strat = GeneralS2C2(N_WORKERS, K, 480, chunks=8)
+                if i % 3 == 0:
+                    a = rng.standard_normal((480, 24))
+                    svc.submit(MatvecJob(
+                        a, [rng.standard_normal(24) for _ in range(2)],
+                        strat, chunks=8))
+                elif i % 3 == 1:
+                    svc.submit(PageRankJob(make_stochastic(480, seed=i),
+                                           strat, iters=3, chunks=8))
+                else:
+                    a = rng.standard_normal((480, 12))
+                    y = np.sign(a @ rng.standard_normal(12))
+                    svc.submit(RegressionJob(a, y, strat, epochs=3, chunks=8))
+            svc.drain(timeout=300)
+            print("\nJobService report (24 heterogeneous jobs):")
+            print(svc.report().format())
+        finally:
+            svc.close()
+    finally:
+        eng.shutdown()
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

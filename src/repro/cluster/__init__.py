@@ -1,0 +1,46 @@
+"""In-process concurrent coded-execution engine (the paper's master/worker
+runtime made real).
+
+``repro.core`` holds the *policies* (Algorithm 1 allocation, timeout rule,
+speed prediction) and ``repro.core.simulation`` evaluates them against a
+closed-form time model.  This package executes them: N worker threads each
+hold an MDS-coded partition and really compute their assigned chunks, a
+master collects completion *events* (out of order, any-k per chunk index),
+fires the §4.3 timeout/reassign path on mispredictions, and decodes.  A
+``JobService`` front end multiplexes concurrent heterogeneous jobs over one
+engine with per-job latency/waste/throughput accounting.
+
+Quickstart::
+
+    from repro.cluster import ClusterConfig, CodedExecutionEngine, TraceInjector
+    from repro.core.strategies import GeneralS2C2
+    from repro.core.traces import controlled_traces
+
+    traces = controlled_traces(12, 50, n_stragglers=2)
+    eng = CodedExecutionEngine(ClusterConfig(n_workers=12, k=10),
+                               injector=TraceInjector(traces))
+    data = eng.load_matrix(a)                      # MDS-encode once
+    y = eng.matvec(data, x, GeneralS2C2(12, 10, a.shape[0], chunks=20))
+    eng.shutdown()
+"""
+
+from repro.cluster.data import CodedData, ReplicatedData, replica_placement
+from repro.cluster.injectors import (BurstyInjector, FailStopInjector,
+                                     NoSlowdown, SlowdownInjector,
+                                     TraceInjector)
+from repro.cluster.master import ClusterConfig, CodedExecutionEngine
+from repro.cluster.metrics import JobMetrics, RoundMetrics, ServiceReport
+from repro.cluster.service import (JobService, MatvecJob, PageRankJob,
+                                   RegressionJob, ServiceSaturated)
+from repro.cluster.worker import ChunkDone, Worker, WorkerDone
+
+__all__ = [
+    "BurstyInjector", "FailStopInjector", "NoSlowdown", "SlowdownInjector",
+    "TraceInjector",
+    "ChunkDone", "Worker", "WorkerDone",
+    "CodedData", "ReplicatedData", "replica_placement",
+    "ClusterConfig", "CodedExecutionEngine",
+    "RoundMetrics", "JobMetrics", "ServiceReport",
+    "JobService", "MatvecJob", "PageRankJob", "RegressionJob",
+    "ServiceSaturated",
+]

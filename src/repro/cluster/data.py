@@ -1,0 +1,133 @@
+"""Tenant data plane: how a job's matrix lives on the cluster.
+
+Two layouts, matching the two families of strategies:
+
+* :class:`CodedData` — the matrix is padded, split row-wise into ``k``
+  blocks, MDS-encoded into ``n`` coded partitions (one per worker), and
+  each partition is over-decomposed into ``C`` chunks of ``rows_per_chunk``
+  rows.  Chunk index ``c`` is decodable from ANY ``k`` workers' chunk-``c``
+  results (the S²C² invariant) — used by MDSCoded / BasicS2C2 /
+  GeneralS2C2.
+* :class:`ReplicatedData` — uncoded ``D/n`` partitions, each placed on
+  ``r`` distinct workers (primary first) — used by UncodedReplication's
+  speculative re-execution.
+
+Encoding runs in float64 on the host (it happens once per tenant; the
+paper's one-time setup cost) and installs one shard per worker under the
+tenant's shard id, so one engine serves many jobs concurrently.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.coding import MDSCode
+
+__all__ = ["CodedData", "ReplicatedData", "replica_placement"]
+
+
+def replica_placement(n: int, replication: int = 3,
+                      seed: int = 0) -> np.ndarray:
+    """(n, r) placement: partition p primary on worker p (matching the
+    simulator's convention), replicas on distinct random other workers."""
+    rng = np.random.default_rng(seed)
+    rows = []
+    for p in range(n):
+        others = [w for w in range(n) if w != p]
+        extra = rng.choice(others, size=max(replication - 1, 0),
+                           replace=False)
+        rows.append([p, *extra.tolist()])
+    return np.asarray(rows, dtype=np.int64)
+
+
+def _pad_rows(a: np.ndarray, multiple: int) -> np.ndarray:
+    rem = (-a.shape[0]) % multiple
+    if rem == 0:
+        return a
+    return np.concatenate([a, np.zeros((rem,) + a.shape[1:], a.dtype)], axis=0)
+
+
+@dataclasses.dataclass
+class CodedData:
+    """An (n, k)-MDS encoded, chunk-decomposed tenant matrix."""
+
+    shard_id: str
+    code: MDSCode
+    chunks: int                    # C — chunk indices per partition
+    rows_per_chunk: int
+    orig_rows: int                 # rows of the un-padded matrix
+    partitions: List[np.ndarray]   # (n,) worker shards, each (C·rpc, d)
+
+    @classmethod
+    def encode(cls, shard_id: str, a: np.ndarray, code: MDSCode,
+               chunks: int) -> "CodedData":
+        a = np.asarray(a, dtype=np.float64)
+        orig_rows = a.shape[0]
+        a = _pad_rows(a, code.k * chunks)
+        blocks = a.reshape(code.k, -1, *a.shape[1:])        # (k, D/k, d)
+        coded = np.einsum("nk,kr...->nr...", code.generator, blocks)
+        rows_per_part = coded.shape[1]
+        return cls(shard_id=shard_id, code=code, chunks=chunks,
+                   rows_per_chunk=rows_per_part // chunks,
+                   orig_rows=orig_rows,
+                   partitions=[np.ascontiguousarray(coded[w])
+                               for w in range(code.n)])
+
+    @property
+    def n(self) -> int:
+        return self.code.n
+
+    @property
+    def k(self) -> int:
+        return self.code.k
+
+    def chunk_range(self, chunk_id: int) -> tuple:
+        r0 = chunk_id * self.rows_per_chunk
+        return r0, r0 + self.rows_per_chunk
+
+    def decode(self, coverage: np.ndarray, partials: np.ndarray) -> np.ndarray:
+        """Decode a full round from per-chunk any-k coverage.
+
+        coverage: (C, n) bool — exactly the k used workers per chunk.
+        partials: (n, C, rpc) — chunk results (zeros where unused).
+        Returns the decoded product of the ORIGINAL matrix (orig_rows,).
+        """
+        weights = self.code.chunk_decode_weights(coverage)   # (C, k, n)
+        dec = np.einsum("ckn,ncr->ckr", weights, partials)   # (C, k, rpc)
+        out = dec.transpose(1, 0, 2).reshape(-1)             # block-major rows
+        return out[: self.orig_rows]
+
+
+@dataclasses.dataclass
+class ReplicatedData:
+    """Uncoded D/n partitions with r-fold replication (primary = first)."""
+
+    shard_id: str
+    n: int
+    rows_per_part: int
+    orig_rows: int
+    placement: np.ndarray          # (n_parts, r) worker ids, primary first
+    partitions: List[np.ndarray]   # (n_parts,) arrays of (rows_per_part, d)
+
+    @classmethod
+    def partition(cls, shard_id: str, a: np.ndarray, n: int,
+                  placement: np.ndarray) -> "ReplicatedData":
+        a = np.asarray(a, dtype=np.float64)
+        orig_rows = a.shape[0]
+        a = _pad_rows(a, n)
+        rpp = a.shape[0] // n
+        parts = [np.ascontiguousarray(a[p * rpp:(p + 1) * rpp])
+                 for p in range(n)]
+        return cls(shard_id=shard_id, n=n, rows_per_part=rpp,
+                   orig_rows=orig_rows, placement=np.asarray(placement),
+                   partitions=parts)
+
+    def part_shard_id(self, p: int) -> str:
+        return f"{self.shard_id}/p{p}"
+
+    def assemble(self, results: List[Optional[np.ndarray]]) -> np.ndarray:
+        out = np.concatenate(results, axis=0)
+        return out[: self.orig_rows]

@@ -1,0 +1,602 @@
+"""Event-driven master: plan → dispatch → any-k collect → decode, for real.
+
+The master drives the exact policy objects from
+:mod:`repro.core.strategies` against live worker threads:
+
+* ``GeneralS2C2`` / ``BasicS2C2`` — ``strategy.plan(predicted_speeds)``
+  produces the Algorithm-1 :class:`~repro.core.s2c2.Allocation`; the master
+  dispatches each worker its cyclic chunk range and collects chunk-level
+  completions until every chunk index is covered by ≥ k distinct workers.
+  If coverage is still short when the §4.3 timeout fires (mean of the first
+  k finishers, floored by the master's own planned makespan, × (1+slack)),
+  the master *reassigns* the missing chunk indices to already-finished
+  workers — possible without any data movement because every worker holds a
+  full coded partition — and cancels overdue workers whose remaining chunks
+  are redundant.
+* ``MDSCoded`` — the static (n, k) baseline: every worker is assigned all C
+  chunks; collection stops at the k-th fastest full partition.
+* ``UncodedReplication`` — uncoded partitions with Hadoop-style speculative
+  re-execution on replica holders once ``detect_fraction`` of partitions
+  have landed.
+
+Speed observation closes the paper's §6.2 loop: measured speeds
+(rows · row_cost / response time) feed the shared
+:class:`~repro.core.predictor.SpeedPredictor`, whose predictions feed the
+next round's plan.  A :class:`~repro.runtime.elastic.FailureDetector`
+accumulates timeout strikes and declares fail-stopped workers dead, which
+zeroes their predicted speed (→ zero allocation) from then on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.cluster.data import CodedData, ReplicatedData
+from repro.cluster.injectors import SlowdownInjector
+from repro.cluster.metrics import RoundMetrics
+from repro.cluster.worker import (ChunkDone, ChunkTask, ComputeFn, Worker,
+                                  WorkerDone, numpy_backend)
+from repro.core.coding import MDSCode
+from repro.core.predictor import SpeedPredictor
+from repro.core.s2c2 import Allocation, expected_makespan
+from repro.core.strategies import (BasicS2C2, GeneralS2C2, MDSCoded,
+                                   UncodedReplication)
+from repro.runtime.elastic import FailureDetector
+
+__all__ = ["ClusterConfig", "CodedExecutionEngine", "RoundOutput"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterConfig:
+    """Engine-level knobs (strategy knobs live on the strategy objects)."""
+
+    n_workers: int
+    k: int
+    row_cost: float = 2.0e-5       # virtual seconds per row at speed 1.0
+    timeout_slack: float = 0.15    # §4.3 slack (≈ predictor MAPE)
+    max_reassign_waves: int = 4
+    starvation_timeout: float = 30.0   # hard liveness bound per wait
+    detector_slack: float = 4.0    # death is conservative: 5× first-k mean
+    detector_dead_after: int = 3   # consecutive struck rounds ⇒ dead
+    generator_kind: str = "systematic_cauchy"
+
+
+@dataclasses.dataclass
+class RoundOutput:
+    y: np.ndarray
+    metrics: RoundMetrics
+
+
+class _RoundState:
+    """Mutable collection state of one in-flight round."""
+
+    def __init__(self, n: int, k: int, chunks: int):
+        self.covered_by: List[Set[int]] = [set() for _ in range(chunks)]
+        self.used: List[List[int]] = [[] for _ in range(chunks)]
+        self.partials: Dict[Tuple[int, int], np.ndarray] = {}
+        self.need = k * chunks          # Σ max(0, k - |used[c]|)
+        self.assigned: List[Set[int]] = [set() for _ in range(n)]
+        self.chunks_done = np.zeros(n, dtype=np.int64)
+        self.wasted_chunks = np.zeros(n, dtype=np.int64)
+        self.finish_t = np.full(n, np.inf)      # WorkerDone wall time
+        self.last_event_t = np.full(n, np.nan)
+        self.tasks: Dict[int, ChunkTask] = {}   # latest task per worker
+        self.cancelled: Set[int] = set()
+
+
+class CodedExecutionEngine:
+    """N worker threads + one master, multiplexed over tenant datasets."""
+
+    def __init__(self, cfg: ClusterConfig, injector: SlowdownInjector,
+                 compute: ComputeFn = numpy_backend,
+                 predictor: Optional[SpeedPredictor] = None):
+        self.cfg = cfg
+        self.events: "queue.Queue" = queue.Queue()
+        self.workers = [Worker(w, self.events, injector, compute)
+                        for w in range(cfg.n_workers)]
+        for w in self.workers:
+            w.start()
+        self.predictor = predictor or SpeedPredictor(cfg.n_workers)
+        self.detector = FailureDetector(cfg.n_workers, cfg.k,
+                                        slack=cfg.detector_slack,
+                                        dead_after=cfg.detector_dead_after)
+        self.dead: Set[int] = set()
+        self.iteration = 0              # drives the injectors
+        self._round_seq = 0
+        self._tenant_seq = 0
+        self._lock = threading.RLock()  # rounds are serialized
+        self._last_observed: Optional[np.ndarray] = None
+
+    # ------------------------------------------------------------------
+    # tenant data management
+    # ------------------------------------------------------------------
+
+    def load_matrix(self, a: np.ndarray, chunks: int = 20,
+                    code: Optional[MDSCode] = None) -> CodedData:
+        """MDS-encode ``a`` once and install one coded shard per worker."""
+        with self._lock:
+            self._tenant_seq += 1
+            shard_id = f"t{self._tenant_seq}"
+        code = code or MDSCode(self.cfg.n_workers, self.cfg.k,
+                               self.cfg.generator_kind)
+        data = CodedData.encode(shard_id, a, code, chunks)
+        for w, worker in enumerate(self.workers):
+            worker.install_shard(shard_id, data.partitions[w])
+        return data
+
+    def load_replicated(self, a: np.ndarray,
+                        placement: np.ndarray) -> ReplicatedData:
+        """Partition ``a`` uncoded and install each partition's replicas."""
+        with self._lock:
+            self._tenant_seq += 1
+            shard_id = f"t{self._tenant_seq}"
+        data = ReplicatedData.partition(shard_id, a, self.cfg.n_workers,
+                                        placement)
+        for p in range(len(data.partitions)):
+            for holder in data.placement[p]:
+                self.workers[int(holder)].install_shard(
+                    data.part_shard_id(p), data.partitions[p])
+        return data
+
+    def unload(self, data) -> None:
+        if isinstance(data, ReplicatedData):
+            for p in range(len(data.partitions)):
+                for holder in data.placement[p]:
+                    self.workers[int(holder)].drop_shard(data.part_shard_id(p))
+        else:
+            for worker in self.workers:
+                worker.drop_shard(data.shard_id)
+
+    def shutdown(self) -> None:
+        for w in self.workers:
+            w.stop()
+        for w in self.workers:
+            w.join(timeout=10.0)
+
+    # ------------------------------------------------------------------
+    # prediction / observation
+    # ------------------------------------------------------------------
+
+    def predicted_speeds(self) -> np.ndarray:
+        pred = np.asarray(self.predictor.predict(), dtype=np.float64)
+        pred = np.clip(pred, 1e-3, None)
+        if self.dead:
+            pred[list(self.dead)] = 0.0
+        return pred
+
+    def _observe(self, speeds: np.ndarray, response: np.ndarray) -> None:
+        """Feed measured speeds to the predictor and strikes to the detector.
+
+        The detector sees a *heartbeat* view of the round: 1.0 for any
+        worker that produced at least one event (however slow — slowness is
+        the allocation's and §4.3's business, and the paper exploits slow
+        workers rather than evicting them), inf for silent ones.  Death
+        therefore requires ``dead_after`` consecutive silent rounds — the
+        §4.4 fail-stop signal — and never fires on timing noise.
+        """
+        prev = (self._last_observed if self._last_observed is not None
+                else np.ones(self.cfg.n_workers))
+        filled = np.where(np.isfinite(speeds), speeds, prev)
+        # a censored (silent-worker) bound can only lower our belief
+        silent = ~np.isfinite(response)
+        filled = np.where(silent & np.isfinite(speeds),
+                          np.minimum(speeds, prev), filled)
+        filled = np.clip(filled, 1e-3, None)
+        self._last_observed = filled
+        self.predictor.observe(filled)
+        heartbeat = np.where(np.isfinite(response), 1.0, np.inf)
+        verdict = self.detector.evaluate(heartbeat)
+        self.dead |= verdict["dead"]
+
+    # ------------------------------------------------------------------
+    # public entry: one matvec round under a strategy
+    # ------------------------------------------------------------------
+
+    def matvec(self, data, x: np.ndarray, strategy) -> RoundOutput:
+        """Execute one coded (or replicated) matrix–vector round."""
+        with self._lock:
+            x = np.asarray(x, dtype=np.float64)
+            if isinstance(strategy, UncodedReplication):
+                if not isinstance(data, ReplicatedData):
+                    raise TypeError("UncodedReplication needs ReplicatedData "
+                                    "(use engine.load_replicated)")
+                return self._run_replicated(data, x, strategy)
+            if not isinstance(data, CodedData):
+                raise TypeError(f"{type(strategy).__name__} needs CodedData "
+                                "(use engine.load_matrix)")
+            return self._run_coded(data, x, strategy)
+
+    # ------------------------------------------------------------------
+    # coded path (MDSCoded / BasicS2C2 / GeneralS2C2)
+    # ------------------------------------------------------------------
+
+    def _plan(self, data: CodedData, strategy) -> Tuple[Allocation, float]:
+        """Allocation + planned (virtual-seconds) makespan for this round."""
+        n, k, C = data.n, data.k, data.chunks
+        pred = self.predicted_speeds()
+        if isinstance(strategy, MDSCoded):
+            count = np.full(n, C, dtype=np.int64)
+            alloc = Allocation(n=n, k=k, chunks=C,
+                               begin=np.zeros(n, dtype=np.int64), count=count)
+            # completion is at the k-th fastest full partition
+            live = np.sort(pred)[::-1]
+            planned = C * data.rows_per_chunk * self.cfg.row_cost / \
+                max(float(live[k - 1]), 1e-6)
+            return alloc, planned
+        if isinstance(strategy, (BasicS2C2, GeneralS2C2)):
+            if strategy.chunks != C:
+                raise ValueError(f"strategy.chunks={strategy.chunks} != "
+                                 f"data.chunks={C}")
+            alloc = strategy.plan(pred)
+            planned = expected_makespan(alloc, pred, data.rows_per_chunk,
+                                        self.cfg.row_cost)
+            return alloc, planned
+        raise TypeError(f"unsupported strategy {type(strategy).__name__}")
+
+    def _dispatch(self, state: _RoundState, rid: int, data: CodedData,
+                  x: np.ndarray, worker: int,
+                  chunk_ids: List[int]) -> None:
+        chunk_ids = [c for c in chunk_ids if c not in state.assigned[worker]]
+        if not chunk_ids:
+            return
+        state.assigned[worker].update(chunk_ids)
+        task = ChunkTask(
+            round_id=rid, iteration=self.iteration, shard_id=data.shard_id,
+            chunks=[(c, *data.chunk_range(c)) for c in chunk_ids],
+            x=x, row_cost=self.cfg.row_cost, cancel=threading.Event())
+        state.tasks[worker] = task
+        state.finish_t[worker] = np.inf
+        self.workers[worker].submit(task)
+
+    def _run_coded(self, data: CodedData, x: np.ndarray,
+                   strategy) -> RoundOutput:
+        cfg = self.cfg
+        n, k, C = data.n, data.k, data.chunks
+        rpc = data.rows_per_chunk
+        alloc, planned = self._plan(data, strategy)
+        slack = getattr(strategy, "timeout_slack", cfg.timeout_slack)
+
+        rid = self._round_seq = self._round_seq + 1
+        state = _RoundState(n, k, C)
+        t0 = time.perf_counter()
+        for w in range(n):
+            if alloc.count[w] > 0:
+                ids = [int((alloc.begin[w] + j) % C)
+                       for j in range(int(alloc.count[w]))]
+                self._dispatch(state, rid, data, x, w, ids)
+
+        active = {w for w in range(n) if alloc.count[w] > 0}
+        # MDSCoded is the conventional baseline: pure any-k collection, no
+        # §4.3 reassignment (that is exactly what S²C² adds on top of it).
+        use_timeout = isinstance(strategy, (BasicS2C2, GeneralS2C2))
+        # provisional deadline: even if k workers never finish (fail-stop),
+        # the wave logic must eventually fire and restore liveness.
+        horizon = 1.0 + slack if use_timeout else 20.0
+        deadline = t0 + max(planned, 1e-3) * horizon
+        deadline_frozen = False         # set after the k-finisher arming/wave
+        waves = 0
+        mispredicted = False
+
+        while state.need > 0:
+            try:
+                ev = self.events.get(
+                    timeout=max(deadline - time.perf_counter(), 1e-4)
+                    if deadline is not None else cfg.starvation_timeout)
+            except queue.Empty:
+                if deadline is None:
+                    raise RuntimeError(
+                        f"cluster starved: round {rid} got no events for "
+                        f"{cfg.starvation_timeout}s (need={state.need})")
+                # timeout fired with coverage incomplete (§4.3 mis-prediction
+                # path; for MDSCoded only the generous liveness bound)
+                mispredicted = mispredicted or use_timeout
+                waves += 1
+                if waves > cfg.max_reassign_waves:
+                    deadline = None     # final: block until starvation bound
+                    continue
+                extra_planned = self._reassign_wave(state, rid, data, x, t0)
+                deadline = time.perf_counter() + \
+                    max(extra_planned, 1e-3) * (1.0 + slack)
+                deadline_frozen = True
+                continue
+
+            if isinstance(ev, WorkerDone):
+                if ev.round_id != rid or ev.cancelled:
+                    continue        # cancel-acks don't count as finishes
+                state.finish_t[ev.worker] = ev.t
+                state.last_event_t[ev.worker] = ev.t
+                if use_timeout and not deadline_frozen:
+                    finished = np.isfinite(state.finish_t)
+                    if int(finished.sum()) >= k:
+                        # §4.3: clock = mean of the first k responders,
+                        # floored by the master's own planned makespan
+                        durations = np.sort(state.finish_t[finished] - t0)[:k]
+                        base = max(float(durations.mean()), planned)
+                        deadline = t0 + base * (1.0 + slack)
+                        deadline_frozen = True
+                continue
+            if not isinstance(ev, ChunkDone) or ev.round_id != rid:
+                continue
+            w, c = ev.worker, ev.chunk_id
+            state.last_event_t[w] = ev.t
+            state.chunks_done[w] += 1
+            if len(state.used[c]) < k and w not in state.covered_by[c]:
+                state.covered_by[c].add(w)
+                state.used[c].append(w)
+                state.partials[(w, c)] = ev.result
+                state.need -= 1
+            else:
+                state.wasted_chunks[w] += 1
+
+        t_collected = time.perf_counter()
+        # cancel everything still running — the round is decodable
+        for w, task in state.tasks.items():
+            if not np.isfinite(state.finish_t[w]):
+                task.cancel.set()
+                state.cancelled.add(w)
+
+        # decode from exactly-k coverage
+        coverage = np.zeros((C, n), dtype=bool)
+        partials = np.zeros((n, C, rpc))
+        for c in range(C):
+            for w in state.used[c]:
+                coverage[c, w] = True
+                partials[w, c] = state.partials[(w, c)]
+        y = data.decode(coverage, partials)
+        t_done = time.perf_counter()
+
+        # measured speeds: rows · row_cost / response time (§6.2's l_i/t_i).
+        # Only silent workers (zero events while allocated) count as
+        # non-responders — slow-but-alive workers are the *normal* case the
+        # allocation handles; silence is the §4.4 fail-stop signal.
+        speeds = np.full(n, np.nan)
+        response = np.full(n, np.nan)
+        for w in range(n):
+            if w not in active:
+                continue            # zero allocation: no measurement
+            if np.isfinite(state.finish_t[w]):
+                el = max(state.finish_t[w] - t0, 1e-9)
+                speeds[w] = len(state.assigned[w]) * rpc * cfg.row_cost / el
+                response[w] = el
+            elif state.chunks_done[w] > 0:
+                el = max(state.last_event_t[w] - t0, 1e-9)
+                speeds[w] = state.chunks_done[w] * rpc * cfg.row_cost / el
+                response[w] = el
+            else:
+                # silent: censored observation — it had work for the whole
+                # round and finished not even one chunk, so its speed is at
+                # most one chunk per round (prevents a collapsed worker from
+                # keeping its stale fast prediction forever)
+                speeds[w] = rpc * cfg.row_cost / max(t_done - t0, 1e-9)
+                response[w] = np.inf
+        # inactive workers: neutral response (neither skews the first-k mean
+        # nor draws a strike)
+        finite = response[np.isfinite(response)]
+        neutral = float(np.median(finite)) if finite.size else 0.0
+        response = np.where(np.isnan(response), neutral, response)
+        self._observe(speeds, response)
+        self.iteration += 1
+
+        useful = np.array(
+            [sum(1 for c in range(C) if w in state.covered_by[c])
+             for w in range(n)], dtype=np.float64) * rpc
+        wasted = state.wasted_chunks.astype(np.float64) * rpc
+        metrics = RoundMetrics(
+            round_id=rid, strategy=type(strategy).__name__,
+            makespan=t_done - t0, compute_time=t_collected - t0,
+            decode_time=t_done - t_collected, useful_rows=useful,
+            wasted_rows=wasted,
+            speeds_measured=np.where(np.isfinite(speeds), speeds, 0.0),
+            planned_makespan=planned, reassign_waves=waves,
+            mispredicted=mispredicted,
+            cancelled_workers=len(state.cancelled))
+        return RoundOutput(y=y, metrics=metrics)
+
+    def _reassign_wave(self, state: _RoundState, rid: int, data: CodedData,
+                       x: np.ndarray, t0: float) -> float:
+        """§4.3: re-target missing chunk indices to available workers.
+
+        Returns the planned (virtual-seconds) makespan of the extra work.
+        Workers still running whose remaining chunks are all redundant are
+        cancelled (their completed chunks stay counted — the engine keeps
+        real partial results, which is strictly better than the paper's
+        discard accounting).
+        """
+        n, k, C = data.n, data.k, data.chunks
+        pending = [c for c in range(C) if len(state.used[c]) < k]
+        finished = [w for w in range(n)
+                    if np.isfinite(state.finish_t[w]) and w not in self.dead]
+        # fastest measured first
+        rate = state.chunks_done / np.maximum(
+            np.where(np.isfinite(state.finish_t),
+                     state.finish_t - t0, time.perf_counter() - t0), 1e-9)
+        finished.sort(key=lambda w: -rate[w])
+        extra: Dict[int, List[int]] = {w: [] for w in finished}
+        short: Set[int] = set()
+        for c in pending:
+            needed = k - len(state.used[c])
+            for w in finished:
+                if needed == 0:
+                    break
+                if c in state.assigned[w] or w in state.covered_by[c]:
+                    continue
+                extra[w].append(c)
+                needed -= 1
+            if needed > 0:
+                short.add(c)    # must wait for a straggler covering it
+        # cancel overdue workers not needed for the still-short chunks
+        for w in range(n):
+            if not np.isfinite(state.finish_t[w]) and w in state.tasks \
+                    and w not in state.cancelled:
+                still_needed = any(c in short for c in state.assigned[w])
+                if not still_needed:
+                    state.tasks[w].cancel.set()
+                    state.cancelled.add(w)
+        max_extra = 0
+        for w, ids in extra.items():
+            if ids:
+                self._dispatch(state, rid, data, x, w, ids)
+                max_extra = max(max_extra, len(ids))
+        planned_extra = max_extra * data.rows_per_chunk * self.cfg.row_cost
+        if short:
+            planned_extra = max(planned_extra,
+                                C * data.rows_per_chunk * self.cfg.row_cost)
+        return planned_extra
+
+    # ------------------------------------------------------------------
+    # uncoded replication path (speculative re-execution)
+    # ------------------------------------------------------------------
+
+    def _run_replicated(self, data: ReplicatedData, x: np.ndarray,
+                        strategy: UncodedReplication) -> RoundOutput:
+        cfg = self.cfg
+        n_parts = len(data.partitions)
+        n = cfg.n_workers
+        rid = self._round_seq = self._round_seq + 1
+        t0 = time.perf_counter()
+        rpp = data.rows_per_part
+
+        results: List[Optional[np.ndarray]] = [None] * n_parts
+        attempt_owner: Dict[int, List[int]] = {p: [] for p in range(n_parts)}
+        tasks: Dict[Tuple[int, int], ChunkTask] = {}
+        busy: Set[int] = set()
+        finish_t = np.full(n, np.nan)
+        rows_done = np.zeros(n)
+        wasted = np.zeros(n)
+
+        def launch(p: int, w: int) -> None:
+            task = ChunkTask(round_id=rid, iteration=self.iteration,
+                             shard_id=data.part_shard_id(p),
+                             chunks=[(p, 0, rpp)], x=x,
+                             row_cost=cfg.row_cost, cancel=threading.Event())
+            tasks[(p, w)] = task
+            attempt_owner[p].append(w)
+            busy.add(w)
+            self.workers[w].submit(task)
+
+        for p in range(n_parts):
+            launch(p, int(data.placement[p][0]))
+
+        spec_budget = strategy.max_speculative
+        n_done = 0
+        deadline = t0 + n_parts * rpp * cfg.row_cost * 20    # liveness bound
+        speculated = False
+        extensions = 0
+        while n_done < n_parts:
+            try:
+                ev = self.events.get(
+                    timeout=max(deadline - time.perf_counter(), 1e-4))
+            except queue.Empty:
+                # a primary died with no idle replica holder: force-launch
+                # every pending partition on ANY idle alive worker holding a
+                # replica.  Keep waiting while an already-launched attempt is
+                # still in flight on a worker not known dead (it may just be
+                # very slow); give up only once nothing is launchable and
+                # nothing credible is in flight (bounded by the extension
+                # cap, so a silently-crashed attempt cannot wait forever).
+                progressed = False
+                in_flight = False
+                for p in range(n_parts):
+                    if results[p] is not None:
+                        continue
+                    holders = [int(h) for h in data.placement[p]
+                               if int(h) not in busy
+                               and int(h) not in self.dead
+                               and int(h) not in attempt_owner[p]]
+                    if holders:
+                        launch(p, holders[0])
+                        progressed = True
+                    elif any(w in busy and w not in self.dead
+                             for w in attempt_owner[p]):
+                        in_flight = True
+                extensions += 1
+                if not progressed and (
+                        not in_flight
+                        or extensions > cfg.max_reassign_waves + 1):
+                    raise RuntimeError(
+                        f"replicated round {rid}: {n_parts - n_done} "
+                        "partitions unrecoverable (all replicas dead?)")
+                deadline = time.perf_counter() + n_parts * rpp * cfg.row_cost * 20
+                continue
+
+            if isinstance(ev, WorkerDone):
+                if ev.round_id == rid:
+                    busy.discard(ev.worker)     # idle again either way
+                    if not ev.cancelled:
+                        finish_t[ev.worker] = ev.t
+                continue
+            if not isinstance(ev, ChunkDone) or ev.round_id != rid:
+                continue
+            p, w = ev.chunk_id, ev.worker
+            rows_done[w] += rpp
+            if results[p] is None:
+                results[p] = ev.result
+                n_done += 1
+                # losers of the race: cancel + account their work as wasted
+                for ow in attempt_owner[p]:
+                    if ow != w and (p, ow) in tasks:
+                        tasks[(p, ow)].cancel.set()
+            else:
+                wasted[w] += rpp
+
+            # LATE-style speculation once detect_fraction of tasks landed
+            if (n_done >= strategy.detect_fraction * n_parts
+                    and spec_budget > 0):
+                speculated = True
+                pending = [p2 for p2 in range(n_parts) if results[p2] is None]
+                for p2 in pending:
+                    if spec_budget == 0:
+                        break
+                    idle_holders = [
+                        int(h) for h in data.placement[p2]
+                        if int(h) not in busy and int(h) not in self.dead
+                        and int(h) not in attempt_owner[p2]]
+                    if idle_holders:
+                        launch(p2, idle_holders[0])
+                        spec_budget -= 1
+
+        t_collected = time.perf_counter()
+        for task in tasks.values():
+            task.cancel.set()
+        y = data.assemble(results)
+        t_done = time.perf_counter()
+
+        speeds = np.full(n, np.nan)
+        response = np.full(n, np.nan)
+        primaries = {int(data.placement[p][0]) for p in range(n_parts)}
+        for w in range(n):
+            if w not in primaries:
+                continue
+            if rows_done[w] > 0:
+                # responded: the round may end before its WorkerDone drains,
+                # so fall back to collection end as the response time
+                el = max((finish_t[w] if np.isfinite(finish_t[w])
+                          else t_collected) - t0, 1e-9)
+                speeds[w] = rows_done[w] * cfg.row_cost / el
+                response[w] = el
+            else:
+                # silent primary: censored bound (see coded path)
+                speeds[w] = rpp * cfg.row_cost / max(t_done - t0, 1e-9)
+                response[w] = np.inf
+        finite = response[np.isfinite(response)]
+        neutral = float(np.median(finite)) if finite.size else 0.0
+        response = np.where(np.isnan(response), neutral, response)
+        self._observe(speeds, response)
+        self.iteration += 1
+
+        useful = rows_done - wasted
+        metrics = RoundMetrics(
+            round_id=rid, strategy=type(strategy).__name__,
+            makespan=t_done - t0, compute_time=t_collected - t0,
+            decode_time=t_done - t_collected, useful_rows=useful,
+            wasted_rows=wasted,
+            speeds_measured=np.where(np.isfinite(speeds), speeds, 0.0),
+            planned_makespan=rpp * cfg.row_cost,
+            mispredicted=speculated)
+        return RoundOutput(y=y, metrics=metrics)

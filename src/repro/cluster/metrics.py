@@ -1,0 +1,160 @@
+"""Per-round / per-job / service-level accounting for the cluster engine.
+
+Everything the paper's evaluation reports, measured from real events:
+makespan (wall), useful vs wasted rows (wasted = chunk results that arrived
+beyond the k needed per chunk index, plus speculative losers), §4.3
+reassignment waves, and at the service level throughput + latency
+percentiles + wasted-work fraction per strategy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+__all__ = ["RoundMetrics", "JobMetrics", "ServiceReport", "percentile"]
+
+
+def percentile(values, q: float) -> float:
+    if len(values) == 0:
+        return float("nan")
+    return float(np.percentile(np.asarray(values, dtype=np.float64), q))
+
+
+@dataclasses.dataclass
+class RoundMetrics:
+    """One executed plan→dispatch→collect→decode round."""
+
+    round_id: int
+    strategy: str
+    makespan: float                   # wall seconds, dispatch → decoded
+    compute_time: float               # dispatch → last used completion
+    decode_time: float
+    useful_rows: np.ndarray           # (n,) rows used in the decode
+    wasted_rows: np.ndarray           # (n,) rows computed but not used
+    speeds_measured: np.ndarray       # (n,) rows/s · row_cost (1.0 = nominal)
+    planned_makespan: float           # master's own prediction (virtual s)
+    reassign_waves: int = 0
+    mispredicted: bool = False
+    cancelled_workers: int = 0
+
+    @property
+    def total_useful(self) -> float:
+        return float(self.useful_rows.sum())
+
+    @property
+    def total_wasted(self) -> float:
+        return float(self.wasted_rows.sum())
+
+    @property
+    def wasted_fraction(self) -> float:
+        tot = self.total_useful + self.total_wasted
+        return self.total_wasted / tot if tot > 0 else 0.0
+
+
+@dataclasses.dataclass
+class JobMetrics:
+    """Lifecycle of one job through the service."""
+
+    job_id: int
+    kind: str
+    strategy: str
+    t_submit: float = 0.0
+    t_start: float = 0.0
+    t_done: float = 0.0
+    rounds: List[RoundMetrics] = dataclasses.field(default_factory=list)
+    error: Optional[str] = None
+
+    @property
+    def queue_wait(self) -> float:
+        return self.t_start - self.t_submit
+
+    @property
+    def service_time(self) -> float:
+        return self.t_done - self.t_start
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.t_submit
+
+    @property
+    def useful_rows(self) -> float:
+        return sum(r.total_useful for r in self.rounds)
+
+    @property
+    def wasted_rows(self) -> float:
+        return sum(r.total_wasted for r in self.rounds)
+
+
+@dataclasses.dataclass
+class ServiceReport:
+    """Aggregate over a batch of completed jobs."""
+
+    n_jobs: int
+    n_rounds: int
+    wall_time: float
+    jobs_per_s: float
+    rounds_per_s: float
+    p50_latency: float
+    p99_latency: float
+    p50_queue_wait: float
+    p99_queue_wait: float
+    wasted_fraction: float
+    by_strategy: Dict[str, Dict[str, float]]
+
+    @classmethod
+    def from_jobs(cls, jobs: List[JobMetrics], wall_time: float
+                  ) -> "ServiceReport":
+        lat = [j.latency for j in jobs]
+        qw = [j.queue_wait for j in jobs]
+        useful = sum(j.useful_rows for j in jobs)
+        wasted = sum(j.wasted_rows for j in jobs)
+        n_rounds = sum(len(j.rounds) for j in jobs)
+        by: Dict[str, Dict[str, float]] = {}
+        for strat in sorted({j.strategy for j in jobs}):
+            js = [j for j in jobs if j.strategy == strat]
+            u = sum(j.useful_rows for j in js)
+            w = sum(j.wasted_rows for j in js)
+            sl = [j.latency for j in js]
+            st = sum(j.service_time for j in js)
+            by[strat] = {
+                "jobs": len(js),
+                "rounds": sum(len(j.rounds) for j in js),
+                "jobs_per_s": len(js) / wall_time if wall_time > 0 else 0.0,
+                "p50_latency": percentile(sl, 50),
+                "p99_latency": percentile(sl, 99),
+                "mean_service_time": st / len(js) if js else 0.0,
+                "wasted_fraction": w / (u + w) if (u + w) > 0 else 0.0,
+            }
+        return cls(
+            n_jobs=len(jobs), n_rounds=n_rounds, wall_time=wall_time,
+            jobs_per_s=len(jobs) / wall_time if wall_time > 0 else 0.0,
+            rounds_per_s=n_rounds / wall_time if wall_time > 0 else 0.0,
+            p50_latency=percentile(lat, 50), p99_latency=percentile(lat, 99),
+            p50_queue_wait=percentile(qw, 50),
+            p99_queue_wait=percentile(qw, 99),
+            wasted_fraction=wasted / (useful + wasted)
+            if (useful + wasted) > 0 else 0.0,
+            by_strategy=by)
+
+    def format(self) -> str:
+        lines = [
+            f"jobs={self.n_jobs} rounds={self.n_rounds} "
+            f"wall={self.wall_time:.2f}s "
+            f"throughput={self.jobs_per_s:.1f} jobs/s "
+            f"({self.rounds_per_s:.1f} rounds/s)",
+            f"latency p50={self.p50_latency * 1e3:.1f}ms "
+            f"p99={self.p99_latency * 1e3:.1f}ms  "
+            f"queue_wait p50={self.p50_queue_wait * 1e3:.1f}ms "
+            f"p99={self.p99_queue_wait * 1e3:.1f}ms  "
+            f"wasted={self.wasted_fraction * 100:.1f}%",
+        ]
+        for strat, s in self.by_strategy.items():
+            lines.append(
+                f"  [{strat}] jobs={s['jobs']:.0f} "
+                f"p50={s['p50_latency'] * 1e3:.1f}ms "
+                f"p99={s['p99_latency'] * 1e3:.1f}ms "
+                f"wasted={s['wasted_fraction'] * 100:.1f}%")
+        return "\n".join(lines)

@@ -1,0 +1,231 @@
+"""Multi-tenant job service: bounded queue of heterogeneous coded jobs.
+
+Producers (any thread) submit :class:`Job` objects; a scheduler thread
+drains the queue and runs each job's rounds on the shared
+:class:`~repro.cluster.master.CodedExecutionEngine` — one engine, many
+tenants, each with its own encoded shards, strategy, and accounting.
+``submit`` is non-blocking against a full queue (raises
+:class:`ServiceSaturated` — backpressure, the admission-control behavior a
+serving tier needs), and every job records queue wait, per-round execution
+metrics, and wasted work, aggregated by :meth:`JobService.report`.
+
+Job kinds (the §6.3 workloads):
+
+* :class:`MatvecJob`    — a batch of raw coded matvecs against one matrix;
+* :class:`PageRankJob`  — damped power iterations (x drifts every round);
+* :class:`RegressionJob`— coded-gradient-descent epochs for logistic / SVM
+  losses (the Ax product is the coded part, as in the paper).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.cluster.data import replica_placement
+from repro.cluster.master import CodedExecutionEngine
+from repro.cluster.metrics import JobMetrics, ServiceReport
+from repro.core.strategies import UncodedReplication
+
+__all__ = ["Job", "MatvecJob", "PageRankJob", "RegressionJob",
+           "JobService", "ServiceSaturated", "JobHandle"]
+
+
+class ServiceSaturated(RuntimeError):
+    """The bounded admission queue is full — resubmit later."""
+
+
+class Job:
+    """One tenant workload: a matrix + a sequence of dependent rounds."""
+
+    kind = "job"
+
+    def __init__(self, a: np.ndarray, strategy, chunks: int = 20):
+        self.a = np.asarray(a, dtype=np.float64)
+        self.strategy = strategy
+        self.chunks = chunks
+
+    # -- engine interaction -------------------------------------------------
+    def prepare(self, engine: CodedExecutionEngine):
+        if isinstance(self.strategy, UncodedReplication):
+            placement = replica_placement(engine.cfg.n_workers,
+                                          self.strategy.replication,
+                                          seed=self.strategy.seed)
+            return engine.load_replicated(self.a, placement)
+        return engine.load_matrix(self.a, chunks=self.chunks)
+
+    def rounds(self, engine: CodedExecutionEngine, data, record):
+        """Run all rounds; ``record(metrics)`` after each. Returns output."""
+        raise NotImplementedError
+
+
+class MatvecJob(Job):
+    """Batch of independent matvecs A @ x_i (raw serving traffic)."""
+
+    kind = "matvec"
+
+    def __init__(self, a, xs: Sequence[np.ndarray], strategy,
+                 chunks: int = 20):
+        super().__init__(a, strategy, chunks)
+        self.xs = [np.asarray(x, dtype=np.float64) for x in xs]
+
+    def rounds(self, engine, data, record):
+        outs = []
+        for x in self.xs:
+            out = engine.matvec(data, x, self.strategy)
+            record(out.metrics)
+            outs.append(out.y)
+        return np.stack(outs)
+
+
+class PageRankJob(Job):
+    """Damped power iteration r ← (1-d)/N + d·M r (§6.3 graph workload)."""
+
+    kind = "pagerank"
+
+    def __init__(self, m, strategy, iters: int = 10, damping: float = 0.85,
+                 chunks: int = 20):
+        super().__init__(m, strategy, chunks)
+        self.iters = iters
+        self.damping = damping
+
+    def rounds(self, engine, data, record):
+        n = self.a.shape[0]
+        r = np.ones(n) / n
+        for _ in range(self.iters):
+            out = engine.matvec(data, r, self.strategy)
+            record(out.metrics)
+            r = (1.0 - self.damping) / n + self.damping * out.y[:n]
+        return r
+
+
+class RegressionJob(Job):
+    """Coded gradient descent: the Ax matvec runs on the cluster."""
+
+    kind = "regression"
+
+    def __init__(self, a, y, strategy, epochs: int = 5, loss: str = "logistic",
+                 lr: float = 0.5, chunks: int = 20):
+        super().__init__(a, strategy, chunks)
+        self.y = np.asarray(y, dtype=np.float64)
+        self.epochs = epochs
+        self.loss = loss
+        self.lr = lr
+
+    def rounds(self, engine, data, record):
+        a, yv = self.a, self.y
+        w = np.zeros(a.shape[1])
+        for _ in range(self.epochs):
+            out = engine.matvec(data, w, self.strategy)
+            record(out.metrics)
+            ax = out.y[: a.shape[0]]
+            margin = yv * ax
+            if self.loss == "logistic":
+                g = a.T @ (-yv / (1.0 + np.exp(margin)))
+            else:                                   # hinge (SVM)
+                g = a.T @ (-yv * (margin < 1)) + 1e-3 * w
+            w -= (self.lr / a.shape[0]) * g
+        return w
+
+
+@dataclasses.dataclass
+class JobHandle:
+    """Future-like handle returned by submit()."""
+
+    job: Job
+    metrics: JobMetrics
+    done: threading.Event = dataclasses.field(default_factory=threading.Event)
+    output: Optional[np.ndarray] = None
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        return self.done.wait(timeout)
+
+
+class JobService:
+    """Bounded-queue scheduler multiplexing jobs over one engine."""
+
+    def __init__(self, engine: CodedExecutionEngine, max_queue: int = 256):
+        self.engine = engine
+        self.queue: "queue.Queue[Optional[JobHandle]]" = queue.Queue(max_queue)
+        self.completed: List[JobMetrics] = []
+        self._seq = 0
+        self._accepted = 0             # jobs actually enqueued (≠ _seq on
+        self._lock = threading.Lock()  # saturation — drain waits on these)
+        self._t_open = time.perf_counter()
+        self._thread = threading.Thread(target=self._run, name="job-service",
+                                        daemon=True)
+        self._thread.start()
+
+    # -- producer side ------------------------------------------------------
+    def submit(self, job: Job) -> JobHandle:
+        with self._lock:
+            self._seq += 1
+            jid = self._seq
+        metrics = JobMetrics(job_id=jid, kind=job.kind,
+                             strategy=type(job.strategy).__name__,
+                             t_submit=time.perf_counter())
+        handle = JobHandle(job=job, metrics=metrics)
+        # count BEFORE enqueueing: the scheduler may start (even finish) the
+        # job the instant it is queued, and a drain() racing this submit
+        # must not observe completed == accepted while the job is live
+        with self._lock:
+            self._accepted += 1
+        try:
+            self.queue.put_nowait(handle)
+        except queue.Full:
+            with self._lock:
+                self._accepted -= 1
+            raise ServiceSaturated(
+                f"job queue full ({self.queue.maxsize}); retry later")
+        return handle
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Block until every submitted job has completed."""
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        while True:
+            with self._lock:
+                pending = self._accepted - len(self.completed)
+            if pending == 0:
+                return
+            if deadline is not None and time.perf_counter() > deadline:
+                raise TimeoutError(f"{pending} jobs still pending")
+            time.sleep(0.002)
+
+    def close(self) -> None:
+        self.queue.put(None)
+        self._thread.join(timeout=30.0)
+
+    # -- scheduler side -----------------------------------------------------
+    def _run(self) -> None:
+        while True:
+            handle = self.queue.get()
+            if handle is None:
+                return
+            m = handle.metrics
+            m.t_start = time.perf_counter()
+            data = None
+            try:
+                data = handle.job.prepare(self.engine)
+                handle.output = handle.job.rounds(
+                    self.engine, data, m.rounds.append)
+            except Exception as exc:          # record, don't kill the service
+                m.error = f"{type(exc).__name__}: {exc}"
+            finally:
+                if data is not None:
+                    self.engine.unload(data)
+            m.t_done = time.perf_counter()
+            with self._lock:
+                self.completed.append(m)
+            handle.done.set()
+
+    # -- reporting ----------------------------------------------------------
+    def report(self) -> ServiceReport:
+        with self._lock:
+            jobs = list(self.completed)
+        wall = time.perf_counter() - self._t_open
+        return ServiceReport.from_jobs(jobs, wall)

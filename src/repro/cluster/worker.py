@@ -1,0 +1,175 @@
+"""Worker thread: holds coded shards, really computes assigned chunks.
+
+A worker owns a shard store (``shard_id -> np.ndarray`` of coded rows, one
+entry per tenant job), an inbox of :class:`ChunkTask` commands, and pushes
+:class:`ChunkDone` / :class:`WorkerDone` events to the master's single
+event queue.  Chunks are computed *in assignment order, one at a time* —
+that is what makes partial work and out-of-order any-k collection real:
+the master sees chunk-granular completions interleaved across workers and
+can stop, cancel, or reassign between any two of them.
+
+Speed injection: before each chunk the worker asks its injector for the
+current speed ``s`` and stretches the chunk to ``rows · row_cost / s``
+seconds of wall time (compute runs natively; the remainder is slept, so the
+throttling is real wall-clock, not bookkeeping).  ``s == 0`` ⇒ fail-stop:
+the worker drops the task silently and ignores all future work.
+
+The compute backend is pluggable: the default is the BLAS matvec
+(``a[rows] @ x``); :func:`kernel_backend` routes each chunk through the
+Pallas ``coded_matvec`` kernel (interpret mode off-TPU) — same semantics,
+exercised by the demo to prove the engine drives ``repro.kernels``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["ChunkTask", "ChunkDone", "WorkerDone", "Worker",
+           "numpy_backend", "kernel_backend"]
+
+ComputeFn = Callable[[np.ndarray, np.ndarray], np.ndarray]
+
+
+@dataclasses.dataclass
+class ChunkTask:
+    """One dispatch: compute ``chunks`` of shard ``shard_id`` against ``x``.
+
+    chunks: list of (chunk_id, row_start, row_stop) in computation order.
+    row_cost: seconds of *virtual* wall time per row at speed 1.0 (the
+        engine's calibration knob — real compute below it is topped up by
+        sleeping, which is how injected slowdowns throttle real work).
+    cancel: master-held event; checked before every chunk.
+    """
+
+    round_id: int
+    iteration: int
+    shard_id: str
+    chunks: List[Tuple[int, int, int]]
+    x: np.ndarray
+    row_cost: float
+    cancel: threading.Event
+
+
+@dataclasses.dataclass
+class ChunkDone:
+    worker: int
+    round_id: int
+    chunk_id: int
+    result: np.ndarray
+    t: float                       # perf_counter at completion
+
+
+@dataclasses.dataclass
+class WorkerDone:
+    """Worker finished its task — or acked a master-initiated cancel.
+
+    ``cancelled=True`` means the task ended early on the master's own
+    cancel signal (an ack, not a completion); a fail-stopped worker emits
+    nothing at all — silence is the failure signal.
+    """
+
+    worker: int
+    round_id: int
+    t: float
+    chunks_done: int
+    cancelled: bool = False
+
+
+def numpy_backend(a_rows: np.ndarray, x: np.ndarray) -> np.ndarray:
+    return a_rows @ x
+
+
+def kernel_backend(interpret: Optional[bool] = None) -> ComputeFn:
+    """Per-chunk compute through the Pallas coded_matvec kernel."""
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    def compute(a_rows: np.ndarray, x: np.ndarray) -> np.ndarray:
+        ids = jnp.zeros((1,), jnp.int32)
+        out = ops.coded_matvec(jnp.asarray(a_rows, jnp.float32),
+                               jnp.asarray(x, jnp.float32), ids,
+                               a_rows.shape[0], interpret=interpret)
+        return np.asarray(out[0], dtype=np.float64)
+
+    return compute
+
+
+class Worker(threading.Thread):
+    """One cluster node: shard store + sequential chunk executor."""
+
+    def __init__(self, worker_id: int, event_queue: "queue.Queue",
+                 injector, compute: ComputeFn = numpy_backend):
+        super().__init__(name=f"worker-{worker_id}", daemon=True)
+        self.worker_id = worker_id
+        self.events = event_queue
+        self.injector = injector
+        self.compute = compute
+        self.inbox: "queue.Queue[Optional[ChunkTask]]" = queue.Queue()
+        self.shards: Dict[str, np.ndarray] = {}
+        self._shard_lock = threading.Lock()
+        self.dead = False
+
+    # -- shard management (called from the master thread) -------------------
+    def install_shard(self, shard_id: str, rows: np.ndarray) -> None:
+        with self._shard_lock:
+            self.shards[shard_id] = np.ascontiguousarray(rows, dtype=np.float64)
+
+    def drop_shard(self, shard_id: str) -> None:
+        with self._shard_lock:
+            self.shards.pop(shard_id, None)
+
+    # -- dispatch ----------------------------------------------------------
+    def submit(self, task: ChunkTask) -> None:
+        self.inbox.put(task)
+
+    def stop(self) -> None:
+        self.inbox.put(None)
+
+    # -- main loop ---------------------------------------------------------
+    def run(self) -> None:
+        while True:
+            task = self.inbox.get()
+            if task is None:
+                return
+            if self.dead:
+                continue            # fail-stopped: silently ignore work
+            self._run_task(task)
+
+    def _run_task(self, task: ChunkTask) -> None:
+        with self._shard_lock:
+            a = self.shards.get(task.shard_id)
+        if a is None:               # tenant evicted under us: ack and move on
+            self.events.put(WorkerDone(self.worker_id, task.round_id,
+                                       time.perf_counter(), 0,
+                                       cancelled=True))
+            return
+        done = 0
+        for chunk_id, r0, r1 in task.chunks:
+            if task.cancel.is_set():
+                # cancelled: remaining chunks abandoned, ack so the master
+                # knows this worker is idle again
+                self.events.put(WorkerDone(self.worker_id, task.round_id,
+                                           time.perf_counter(), done,
+                                           cancelled=True))
+                return
+            s = self.injector.speed(self.worker_id, task.iteration)
+            if s <= 0.0:
+                self.dead = True    # fail-stop: no event, ever again
+                return
+            t0 = time.perf_counter()
+            y = self.compute(a[r0:r1], task.x)
+            target = (r1 - r0) * task.row_cost / s
+            elapsed = time.perf_counter() - t0
+            if target > elapsed:
+                time.sleep(target - elapsed)
+            self.events.put(ChunkDone(self.worker_id, task.round_id,
+                                      chunk_id, y, time.perf_counter()))
+            done += 1
+        self.events.put(WorkerDone(self.worker_id, task.round_id,
+                                   time.perf_counter(), done))

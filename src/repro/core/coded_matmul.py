@@ -31,6 +31,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:  # jax >= 0.5 exposes shard_map at the top level
+    _shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover - depends on pinned jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 from repro.core.coding import MDSCode
 from repro.core.s2c2 import Allocation
 
@@ -143,7 +148,7 @@ class CodedMatvec:
             return jax.lax.psum(contrib, axis)    # (chunks, k, rpc), replicated
 
         rows = coded.shape[1]
-        dec = jax.shard_map(
+        dec = _shard_map(
             worker, mesh=self.mesh,
             in_specs=(P(self.axis, None, None), P(), P(), P(), P()),
             out_specs=P(),

@@ -163,9 +163,11 @@ def _proportional_counts(speeds: np.ndarray, total: int, cap: int) -> np.ndarray
             if remaining == 0:
                 break
     if remaining > 0:
+        live = int((speeds > 0).sum())
         raise ValueError(
-            f"infeasible allocation: total={total} > n*cap={n * cap} "
-            "(need more live capacity; lower k or raise chunks)")
+            f"infeasible allocation: total={total} > live capacity "
+            f"{live}*{cap}={live * cap} ({n - live} of {n} workers have "
+            "zero speed; need more live workers, lower k, or more chunks)")
     return counts
 
 

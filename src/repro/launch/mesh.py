@@ -9,7 +9,12 @@ single-CPU topology.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5 has explicit axis types; older pins default to Auto anyway
+    from jax.sharding import AxisType
+    _AXIS_KW = lambda n: {"axis_types": (AxisType.Auto,) * n}
+except ImportError:  # pragma: no cover - depends on pinned jax
+    _AXIS_KW = lambda n: {}
 
 __all__ = ["make_production_mesh", "make_worker_mesh", "FSDP_AXES",
            "BATCH_AXES"]
@@ -23,11 +28,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     """16×16 single pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_AXIS_KW(len(axes)))
 
 
 def make_worker_mesh(n_workers: int, axis: str = "workers"):
     """1-D mesh for the coded-computing runtime (n coded workers)."""
-    return jax.make_mesh((n_workers,), (axis,),
-                         axis_types=(AxisType.Auto,))
+    return jax.make_mesh((n_workers,), (axis,), **_AXIS_KW(1))

@@ -41,11 +41,22 @@ class FailureDetector:
 
     def evaluate(self, response_times: np.ndarray) -> Dict[str, object]:
         """response_times: (n,) seconds, np.inf for no response."""
-        order = np.argsort(response_times)
-        k_first = order[: self.k]
-        base = float(np.mean(response_times[k_first]))
-        timeout = base * (1.0 + self.slack)
-        timed_out = response_times > timeout
+        response_times = np.asarray(response_times, dtype=np.float64)
+        finite = np.isfinite(response_times)
+        # The first-k mean must only average *actual* responders: with fewer
+        # than k finite responses an inf would make the timeout inf and no
+        # straggler would ever be flagged.  Clamp to the finite responders;
+        # non-responders are always struck.
+        n_base = min(self.k, int(finite.sum()))
+        if n_base == 0:
+            timeout = np.inf
+            timed_out = ~finite          # nobody responded: strike everyone
+        else:
+            order = np.argsort(np.where(finite, response_times, np.inf))
+            k_first = order[:n_base]
+            base = float(np.mean(response_times[k_first]))
+            timeout = base * (1.0 + self.slack)
+            timed_out = (response_times > timeout) | ~finite
         self.timeout_strikes = np.where(timed_out,
                                         self.timeout_strikes + 1, 0)
         dead = self.timeout_strikes >= self.dead_after

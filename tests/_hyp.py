@@ -1,0 +1,122 @@
+"""Hypothesis shim: real hypothesis when installed, fallback sampler otherwise.
+
+The tier-1 suite must run green from a bare environment (numpy + jax +
+pytest only).  When ``hypothesis`` is importable we re-export the real
+``given``/``settings``/``strategies``; otherwise we provide a minimal
+pseudo-random sampler covering exactly the strategy surface these tests
+use (integers, floats, lists, tuples, just, permutations, data, flatmap).
+
+The fallback draws a fixed number of seeded examples per test — no
+shrinking, no database — which keeps the property tests meaningful
+(randomized coverage of the invariants) without the dependency.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import numpy as _np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A sampler: example(rng) -> value."""
+
+        def __init__(self, sample):
+            self._sample = sample
+
+        def example(self, rng):
+            return self._sample(rng)
+
+        def flatmap(self, fn):
+            return _Strategy(lambda rng: fn(self.example(rng)).example(rng))
+
+        def map(self, fn):
+            return _Strategy(lambda rng: fn(self.example(rng)))
+
+    class _DataObject:
+        """Fallback for st.data(): interactive draws inside the test body."""
+
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy, label=None):
+            return strategy.example(self._rng)
+
+    class _DataStrategy(_Strategy):
+        def __init__(self):
+            super().__init__(lambda rng: _DataObject(rng))
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def sample(rng):
+                size = int(rng.integers(min_size, max_size + 1))
+                return [elements.example(rng) for _ in range(size)]
+            return _Strategy(sample)
+
+        @staticmethod
+        def tuples(*strats):
+            return _Strategy(lambda rng: tuple(s.example(rng) for s in strats))
+
+        @staticmethod
+        def just(value):
+            return _Strategy(lambda rng: value)
+
+        @staticmethod
+        def permutations(values):
+            vals = list(values)
+            return _Strategy(
+                lambda rng: [vals[i] for i in rng.permutation(len(vals))])
+
+        @staticmethod
+        def data():
+            return _DataStrategy()
+
+        @staticmethod
+        def sampled_from(values):
+            vals = list(values)
+            return _Strategy(lambda rng: vals[int(rng.integers(len(vals)))])
+
+    st = _St()
+
+    def settings(**kwargs):
+        def deco(fn):
+            fn._fallback_settings = kwargs
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            cfg = getattr(fn, "_fallback_settings", {})
+            n_examples = int(cfg.get("max_examples", 20))
+
+            def wrapper(*args, **kwargs):
+                # one deterministic stream per test, varied across examples
+                # (crc32, not hash(): str hashing is salted per process and
+                # would make failing draws unreproducible)
+                import zlib
+                rng = _np.random.default_rng(
+                    zlib.crc32(fn.__qualname__.encode()))
+                for _ in range(n_examples):
+                    drawn = [s.example(rng) for s in strategies]
+                    fn(*args, *drawn, **kwargs)
+            # NOT functools.wraps: pytest must see the zero-arg signature,
+            # else it mistakes the drawn parameters for fixtures.
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco

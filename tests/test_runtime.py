@@ -125,6 +125,46 @@ class TestCodedLMHead:
         assert all(len(v) == 3 for v in out.values())
 
 
+class TestFailureDetector:
+    def test_straggler_flagged_with_full_responses(self):
+        from repro.runtime.elastic import FailureDetector
+        det = FailureDetector(n=6, k=4, slack=0.2)
+        rt = np.array([1.0, 1.0, 1.1, 1.0, 1.05, 5.0])
+        out = det.evaluate(rt)
+        assert out["stragglers"] == {5}
+        assert np.isfinite(out["timeout"])
+
+    def test_fewer_than_k_responders_still_finite_timeout(self):
+        """inf responses must not poison the first-k mean (the §4.3 rule
+        degrades to the finite responders)."""
+        from repro.runtime.elastic import FailureDetector
+        det = FailureDetector(n=6, k=4, slack=0.2)
+        rt = np.array([1.0, 1.1, np.inf, np.inf, np.inf, np.inf])
+        out = det.evaluate(rt)
+        assert np.isfinite(out["timeout"])
+        assert out["stragglers"] == {2, 3, 4, 5}
+
+    def test_nobody_responds_strikes_everyone(self):
+        from repro.runtime.elastic import FailureDetector
+        det = FailureDetector(n=4, k=2, slack=0.2, dead_after=2)
+        rt = np.full(4, np.inf)
+        out1 = det.evaluate(rt)
+        assert out1["stragglers"] == {0, 1, 2, 3}
+        out2 = det.evaluate(rt)              # second strike ⇒ dead
+        assert out2["dead"] == {0, 1, 2, 3}
+
+    def test_strikes_accumulate_to_dead(self):
+        from repro.runtime.elastic import FailureDetector
+        det = FailureDetector(n=5, k=3, slack=0.15, dead_after=3)
+        rt = np.array([1.0, 1.0, 1.0, 1.0, np.inf])
+        for _ in range(2):
+            out = det.evaluate(rt)
+            assert out["dead"] == set()
+            assert 4 in out["stragglers"]
+        out = det.evaluate(rt)
+        assert out["dead"] == {4}
+
+
 class TestDistributedCodedMatvec:
     def test_shard_map_path(self):
         """Full distributed path on 4 virtual devices (subprocess so the

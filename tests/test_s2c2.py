@@ -4,7 +4,7 @@ property tests of the decodability (coverage ≥ k) guarantee."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.s2c2 import (allocation_masks, basic_allocation,
                              expected_makespan, general_allocation,
@@ -109,6 +109,83 @@ def test_jax_allocator_matches_invariants(args):
     assert (count <= chunks).all()
     masks = allocation_masks(begin, count, chunks)
     assert (masks.sum(0) >= k).all()
+
+
+class TestHostJaxParity:
+    """general_allocation vs general_allocation_jax on the same inputs:
+    identical invariants (Σcount == k·C, coverage ≥ k, count ≤ C) and
+    per-worker agreement up to the documented remainder-policy difference
+    (host: largest-remainder spill to slowest; jax: one headroom wave)."""
+
+    CHUNKS = 48
+
+    def _compare(self, speeds, k, chunks=CHUNKS):
+        al = general_allocation(speeds, k, chunks)
+        begin, count = general_allocation_jax(
+            jnp.asarray(speeds, jnp.float32), k, chunks)
+        begin, count = np.asarray(begin), np.asarray(count)
+        assert count.sum() == k * chunks
+        assert (count >= 0).all() and (count <= chunks).all()
+        cov = allocation_masks(begin, count, chunks).sum(0)
+        assert (cov >= k).all()
+        # agreement: same totals, near-identical per-worker counts
+        diff = np.abs(count - al.count)
+        assert diff.max() <= 2, (speeds, al.count, count)
+        return al, count
+
+    def test_randomized_speed_vectors(self):
+        rng = np.random.default_rng(42)
+        exact = 0
+        trials = 60
+        for _ in range(trials):
+            n = int(rng.integers(3, 12))
+            k = int(rng.integers(1, n))
+            speeds = rng.uniform(0.05, 5.0, n)
+            al, count = self._compare(speeds, k)
+            exact += int((count == al.count).all())
+        # off-by-one remainder differences must be the rare exception
+        assert exact >= 0.9 * trials
+
+    def test_zero_speed_workers_agree(self):
+        rng = np.random.default_rng(7)
+        for _ in range(20):
+            n = int(rng.integers(4, 12))
+            k = int(rng.integers(1, n - 1))
+            speeds = rng.uniform(0.5, 2.0, n)
+            dead = rng.choice(n, size=1)
+            speeds[dead] = 0.0
+            al, count = self._compare(speeds, k)
+            assert al.count[dead] == 0
+            assert count[dead] == 0          # zero-speed ⇒ zero work, both
+
+    def test_tied_speeds_agree(self):
+        # full tie: both allocators must hand out equal shares
+        al, count = self._compare(np.ones(6), k=4)
+        np.testing.assert_array_equal(count, al.count)
+        assert al.count.min() == al.count.max() == 4 * self.CHUNKS // 6
+        # partial ties (coarse grid of speeds)
+        rng = np.random.default_rng(11)
+        for _ in range(20):
+            n = int(rng.integers(3, 10))
+            k = int(rng.integers(1, n))
+            speeds = np.round(rng.uniform(0.5, 2.0, n), 1)
+            self._compare(speeds, k)
+
+    def test_makespans_equivalent(self):
+        """The two allocators' plans predict the same makespan (±1 chunk)."""
+        rng = np.random.default_rng(3)
+        for _ in range(20):
+            n = int(rng.integers(4, 12))
+            k = int(rng.integers(2, n))
+            speeds = rng.uniform(0.2, 3.0, n)
+            al = general_allocation(speeds, k, self.CHUNKS)
+            _, count = general_allocation_jax(
+                jnp.asarray(speeds, jnp.float32), k, self.CHUNKS)
+            count = np.asarray(count)
+            t_host = (al.count / speeds).max()
+            t_jax = (count / speeds).max()
+            slack = 2.0 / speeds[speeds > 0].min()
+            assert abs(t_host - t_jax) <= slack
 
 
 def test_expected_makespan():

@@ -151,12 +151,12 @@ class TestPredictor:
 
 class TestShardingRules:
     def _mesh(self):
-        return jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import _AXIS_KW
+        return jax.make_mesh((1, 1), ("data", "model"), **_AXIS_KW(2))
 
     def test_nondivisible_drops(self):
-        mesh = jax.make_mesh((1,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_worker_mesh
+        mesh = make_worker_mesh(1, axis="model")
         spec = resolve_axes(("vocab",), (7,), mesh)   # 7 % 1 == 0 -> sharded
         # with axis size 1 sharding is trivial; test divisibility via rules
         spec2 = resolve_axes(("heads",), (7,), mesh)
