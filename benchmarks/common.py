@@ -54,3 +54,22 @@ class Csv:
     def add(self, name: str, us_per_call: float, derived: str = "") -> None:
         self.rows.append(f"{name},{us_per_call:.2f},{derived}")
         print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+
+
+class BenchRecorder:
+    """Machine-readable perf baseline collected across benchmark modules.
+
+    ``run.py`` serializes :attr:`data` to ``BENCH_cluster.json`` so future
+    PRs have a regression trajectory (makespans, decode times, service
+    throughput).  Keys are slash-paths, values are flat dicts of floats.
+    """
+
+    def __init__(self):
+        self.data: Dict[str, Dict[str, float]] = {}
+
+    def record(self, key: str, **values: float) -> None:
+        self.data[key] = {k: float(v) for k, v in values.items()}
+
+
+#: shared recorder — fig modules import and write, run.py serializes
+BENCH = BenchRecorder()

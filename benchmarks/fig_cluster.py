@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import Csv
+from benchmarks.common import BENCH, Csv
 from repro.cluster import (BurstyInjector, ClusterConfig,
                            CodedExecutionEngine, FailStopInjector, JobService,
                            MatvecJob, PageRankJob, RegressionJob,
@@ -47,13 +47,15 @@ def _run_engine(strategy, injector, a, x, iters=ITERS):
             data = eng.load_replicated(a, replica_placement(N, 3, seed=1))
         else:
             data = eng.load_matrix(a, chunks=CHUNKS)
-        ms, wasted, useful = [], 0.0, 0.0
+        ms, dts, wasted, useful = [], [], 0.0, 0.0
         for _ in range(iters):
             out = eng.matvec(data, x, strategy)
             ms.append(out.metrics.makespan)
+            dts.append(out.metrics.decode_time)
             wasted += out.metrics.total_wasted
             useful += out.metrics.total_useful
-        return float(np.mean(ms[1:])), wasted / max(useful + wasted, 1e-9)
+        return (float(np.mean(ms[1:])), wasted / max(useful + wasted, 1e-9),
+                float(np.mean(dts[1:])))
     finally:
         eng.shutdown()
 
@@ -64,9 +66,11 @@ def exec_vs_sim(csv: Csv, a, x) -> None:
                      decode_cost_per_row=0, assemble_cost_per_row=0)
     for name, strat in _strategies().items():
         sim = simulate_run(strat, traces, cost).mean_time
-        real, _ = _run_engine(strat, TraceInjector(traces), a, x)
+        real, _, decode_t = _run_engine(strat, TraceInjector(traces), a, x)
         csv.add(f"cluster/exec_vs_sim/{name}", real * 1e6,
                 f"sim_us={sim * 1e6:.0f} ratio={real / sim:.2f}")
+        BENCH.record(f"cluster/round/{name}",
+                     makespan_s=real, sim_s=sim, decode_time_s=decode_t)
 
 
 def sweep(csv: Csv, a, x) -> None:
@@ -78,7 +82,7 @@ def sweep(csv: Csv, a, x) -> None:
     }
     for iname, mk_inj in injectors.items():
         for sname, strat in _strategies().items():
-            real, wfrac = _run_engine(strat, mk_inj(), a, x)
+            real, wfrac, _ = _run_engine(strat, mk_inj(), a, x)
             csv.add(f"cluster/sweep/{iname}/{sname}", real * 1e6,
                     f"wasted_frac={wfrac:.3f}")
 
@@ -118,6 +122,11 @@ def service_bench(csv: Csv) -> None:
                 f"jobs={rep.n_jobs} jobs_per_s={rep.jobs_per_s:.1f} "
                 f"p99_us={rep.p99_latency * 1e6:.0f} "
                 f"wasted={rep.wasted_fraction:.3f}")
+        BENCH.record("cluster/service",
+                     jobs_per_s=rep.jobs_per_s,
+                     p50_latency_s=rep.p50_latency,
+                     p99_latency_s=rep.p99_latency,
+                     wasted_fraction=rep.wasted_fraction)
         for sname, s in rep.by_strategy.items():
             csv.add(f"cluster/service/{sname}", s["p50_latency"] * 1e6,
                     f"jobs={s['jobs']:.0f} jobs_per_s={s['jobs_per_s']:.2f} "

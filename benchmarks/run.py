@@ -1,16 +1,21 @@
 """Benchmark runner: one module per paper figure/table.
 
-Prints ``name,us_per_call,derived`` CSV.  Usage:
+Prints ``name,us_per_call,derived`` CSV and, when the cluster modules ran,
+writes the machine-readable perf baseline ``BENCH_cluster.json`` (round
+makespans, decode times, service jobs/s) next to the repo root so future
+PRs have a regression trajectory.  Usage:
     PYTHONPATH=src python -m benchmarks.run [--only fig8]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import sys
 import traceback
 
-from benchmarks.common import Csv
+from benchmarks.common import BENCH, Csv
 
 MODULES = [
     ("fig1+3", "benchmarks.fig_overheads"),
@@ -19,14 +24,20 @@ MODULES = [
     ("fig8-11", "benchmarks.fig_cloud"),
     ("fig12", "benchmarks.fig_polynomial"),
     ("cluster", "benchmarks.fig_cluster"),
+    ("throughput", "benchmarks.fig_throughput"),
     ("kernels", "benchmarks.kernel_bench"),
     ("roofline", "benchmarks.roofline_bench"),
 ]
+
+BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / \
+    "BENCH_cluster.json"
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--bench-out", default=str(BENCH_PATH),
+                    help="where to write the JSON perf baseline")
     args = ap.parse_args()
     csv = Csv()
     print("name,us_per_call,derived")
@@ -41,6 +52,18 @@ def main() -> int:
         except Exception:
             traceback.print_exc()
             failures += 1
+    if BENCH.data:
+        out = pathlib.Path(args.bench_out)
+        merged = {}
+        if out.exists():        # partial (--only) runs refresh their slice
+            try:
+                merged = json.loads(out.read_text())
+            except ValueError:
+                merged = {}
+        merged.update(BENCH.data)
+        out.write_text(json.dumps(merged, indent=2, sort_keys=True) + "\n")
+        print(f"# wrote {out} ({len(BENCH.data)} new / "
+              f"{len(merged)} total entries)")
     print(f"# done, failures={failures}")
     return 1 if failures else 0
 

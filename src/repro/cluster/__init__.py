@@ -6,9 +6,13 @@ speed prediction) and ``repro.core.simulation`` evaluates them against a
 closed-form time model.  This package executes them: N worker threads each
 hold an MDS-coded partition and really compute their assigned chunks, a
 master collects completion *events* (out of order, any-k per chunk index),
-fires the §4.3 timeout/reassign path on mispredictions, and decodes.  A
-``JobService`` front end multiplexes concurrent heterogeneous jobs over one
-engine with per-job latency/waste/throughput accounting.
+fires the §4.3 timeout/reassign path on mispredictions, and decodes.
+Rounds are keyed by ``round_id`` and pipelined: ``matvec_async`` returns a
+``RoundHandle`` immediately and independent rounds (same or different
+tenants) share the worker pool chunk-by-chunk.  A ``JobService`` front end
+multiplexes concurrent heterogeneous jobs over one engine through
+``max_inflight`` scheduler slots with per-job latency/waste/throughput
+accounting.
 
 Quickstart::
 
@@ -28,18 +32,20 @@ from repro.cluster.data import CodedData, ReplicatedData, replica_placement
 from repro.cluster.injectors import (BurstyInjector, FailStopInjector,
                                      NoSlowdown, SlowdownInjector,
                                      TraceInjector)
-from repro.cluster.master import ClusterConfig, CodedExecutionEngine
+from repro.cluster.master import (ClusterConfig, CodedExecutionEngine,
+                                  RoundHandle, RoundOutput)
 from repro.cluster.metrics import JobMetrics, RoundMetrics, ServiceReport
 from repro.cluster.service import (JobService, MatvecJob, PageRankJob,
                                    RegressionJob, ServiceSaturated)
-from repro.cluster.worker import ChunkDone, Worker, WorkerDone
+from repro.cluster.worker import (ChunkDone, KernelBackend, Worker,
+                                  WorkerDone, kernel_backend)
 
 __all__ = [
     "BurstyInjector", "FailStopInjector", "NoSlowdown", "SlowdownInjector",
     "TraceInjector",
-    "ChunkDone", "Worker", "WorkerDone",
+    "ChunkDone", "KernelBackend", "Worker", "WorkerDone", "kernel_backend",
     "CodedData", "ReplicatedData", "replica_placement",
-    "ClusterConfig", "CodedExecutionEngine",
+    "ClusterConfig", "CodedExecutionEngine", "RoundHandle", "RoundOutput",
     "RoundMetrics", "JobMetrics", "ServiceReport",
     "JobService", "MatvecJob", "PageRankJob", "RegressionJob",
     "ServiceSaturated",

@@ -88,16 +88,50 @@ class CodedData:
         r0 = chunk_id * self.rows_per_chunk
         return r0, r0 + self.rows_per_chunk
 
-    def decode(self, coverage: np.ndarray, partials: np.ndarray) -> np.ndarray:
+    def decode(self, coverage: np.ndarray, partials: np.ndarray,
+               use_cache: bool = True,
+               use_kernel: bool = False) -> np.ndarray:
         """Decode a full round from per-chunk any-k coverage.
 
         coverage: (C, n) bool — exactly the k used workers per chunk.
         partials: (n, C, rpc) — chunk results (zeros where unused).
         Returns the decoded product of the ORIGINAL matrix (orig_rows,).
         """
-        weights = self.code.chunk_decode_weights(coverage)   # (C, k, n)
-        dec = np.einsum("ckn,ncr->ckr", weights, partials)   # (C, k, rpc)
-        out = dec.transpose(1, 0, 2).reshape(-1)             # block-major rows
+        dms, ids = self.code.chunk_decode_weights_compact(
+            coverage, use_cache=use_cache)
+        # gather only the k used rows per chunk: (C, k, rpc)
+        y = partials[ids, np.arange(self.chunks)[:, None], :]
+        return self.decode_compact(dms, y, use_kernel=use_kernel)
+
+    def decode_compact(self, dms: np.ndarray, y: np.ndarray,
+                       out: Optional[np.ndarray] = None,
+                       use_kernel: bool = False) -> np.ndarray:
+        """Hot-path decode: one batched (C, k, k) @ (C, k, rpc) contraction.
+
+        dms: per-chunk decode submatrices (from ``decode_submats`` /
+        ``chunk_decode_weights_compact``); y: the matching gathered
+        partials.  The result is assembled straight into a preallocated
+        block-major output buffer (``out`` may be supplied to reuse one
+        across rounds).  ``use_kernel=True`` routes the contraction through
+        the batched Pallas ``mds_decode`` kernel in float32 — an explicit
+        opt-in (for TPU hosts) because it trades the default float64
+        precision for kernel throughput; the default is batched float64
+        BLAS on every platform, so results never vary silently by host.
+        """
+        C, k, rpc = y.shape
+        if out is None:
+            out = np.empty(k * C * rpc, dtype=np.float64)
+        # block-major view: out[block i][chunk c] — matmul writes into the
+        # strided view directly, no per-chunk stacking or transpose copy
+        view = out.reshape(k, C, rpc).transpose(1, 0, 2)
+        if use_kernel:
+            from repro.kernels import ops
+            import jax.numpy as jnp
+            dec = ops.mds_decode(jnp.asarray(dms, jnp.float32),
+                                 jnp.asarray(y, jnp.float32))
+            view[:] = np.asarray(dec, dtype=np.float64)
+        else:
+            np.matmul(dms, y, out=view)
         return out[: self.orig_rows]
 
 

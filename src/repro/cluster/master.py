@@ -1,4 +1,4 @@
-"""Event-driven master: plan → dispatch → any-k collect → decode, for real.
+"""Event-driven master: plan → dispatch → any-k collect → decode, pipelined.
 
 The master drives the exact policy objects from
 :mod:`repro.core.strategies` against live worker threads:
@@ -19,12 +19,26 @@ The master drives the exact policy objects from
   re-execution on replica holders once ``detect_fraction`` of partitions
   have landed.
 
+**Pipelining.**  Rounds are keyed by ``round_id`` on the shared event
+queue: a collector thread routes every worker event to its round's own
+inbox, so any number of independent rounds can be in flight at once over
+the same worker pool.  :meth:`CodedExecutionEngine.matvec_async` plans,
+dispatches, and returns a :class:`RoundHandle` immediately; a per-round
+driver runs the §4.3 collect/timeout/reassign loop to completion.  Workers
+drain their inboxes in FIFO order, so a fast worker that finishes its
+share of round A immediately starts on round B instead of idling while A's
+stragglers catch up — the cross-tenant analogue of the paper's
+slack-squeezing.  Cancellation events carry their ``round_id`` and are
+routed (or dropped, once the round retired) strictly by it, so a late
+cancel ack can never count against another round.
+
 Speed observation closes the paper's §6.2 loop: measured speeds
 (rows · row_cost / response time) feed the shared
 :class:`~repro.core.predictor.SpeedPredictor`, whose predictions feed the
 next round's plan.  A :class:`~repro.runtime.elastic.FailureDetector`
 accumulates timeout strikes and declares fail-stopped workers dead, which
-zeroes their predicted speed (→ zero allocation) from then on.
+zeroes their predicted speed (→ zero allocation) from then on.  Shared
+predictor/detector state is updated under one lock at round boundaries.
 """
 
 from __future__ import annotations
@@ -49,7 +63,8 @@ from repro.core.strategies import (BasicS2C2, GeneralS2C2, MDSCoded,
                                    UncodedReplication)
 from repro.runtime.elastic import FailureDetector
 
-__all__ = ["ClusterConfig", "CodedExecutionEngine", "RoundOutput"]
+__all__ = ["ClusterConfig", "CodedExecutionEngine", "RoundOutput",
+           "RoundHandle"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,16 +76,45 @@ class ClusterConfig:
     row_cost: float = 2.0e-5       # virtual seconds per row at speed 1.0
     timeout_slack: float = 0.15    # §4.3 slack (≈ predictor MAPE)
     max_reassign_waves: int = 4
-    starvation_timeout: float = 30.0   # hard liveness bound per wait
+    starvation_timeout: float = 30.0   # liveness: max event silence/round
     detector_slack: float = 4.0    # death is conservative: 5× first-k mean
     detector_dead_after: int = 3   # consecutive struck rounds ⇒ dead
     generator_kind: str = "systematic_cauchy"
+    decode_with_kernel: bool = False   # opt-in: Pallas mds_decode (float32)
 
 
 @dataclasses.dataclass
 class RoundOutput:
     y: np.ndarray
     metrics: RoundMetrics
+
+
+class RoundHandle:
+    """Future-like handle for one in-flight round (see ``matvec_async``)."""
+
+    def __init__(self, round_id: int, strategy: str):
+        self.round_id = round_id
+        self.strategy = strategy
+        self._done = threading.Event()
+        self._output: Optional[RoundOutput] = None
+        self._error: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def _finish(self, output: Optional[RoundOutput],
+                error: Optional[BaseException]) -> None:
+        self._output = output
+        self._error = error
+        self._done.set()
+
+    def result(self, timeout: Optional[float] = None) -> RoundOutput:
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"round {self.round_id} still in flight")
+        if self._error is not None:
+            raise self._error
+        assert self._output is not None
+        return self._output
 
 
 class _RoundState:
@@ -86,12 +130,25 @@ class _RoundState:
         self.wasted_chunks = np.zeros(n, dtype=np.int64)
         self.finish_t = np.full(n, np.inf)      # WorkerDone wall time
         self.last_event_t = np.full(n, np.nan)
+        self.dispatch_t = np.full(n, np.nan)    # latest task dispatched
+        self.start_t = np.full(n, np.nan)       # latest task began serving
+        self.first_start_t = np.full(n, np.nan)  # first task began serving
         self.tasks: Dict[int, ChunkTask] = {}   # latest task per worker
         self.cancelled: Set[int] = set()
 
 
+class _Shutdown:
+    """Sentinel routed through the shared event queue to stop the collector."""
+
+
 class CodedExecutionEngine:
-    """N worker threads + one master, multiplexed over tenant datasets."""
+    """N worker threads + one master, multiplexed over tenant datasets.
+
+    Multiple rounds (of the same or different tenants) may be in flight
+    concurrently; per-round state is private to the round's driver, while
+    the predictor/detector/iteration state shared across rounds is guarded
+    by ``_obs_lock``.
+    """
 
     def __init__(self, cfg: ClusterConfig, injector: SlowdownInjector,
                  compute: ComputeFn = numpy_backend,
@@ -110,8 +167,73 @@ class CodedExecutionEngine:
         self.iteration = 0              # drives the injectors
         self._round_seq = 0
         self._tenant_seq = 0
-        self._lock = threading.RLock()  # rounds are serialized
+        self._lock = threading.Lock()       # seq counters only
+        self._obs_lock = threading.Lock()   # predictor/detector/iteration
         self._last_observed: Optional[np.ndarray] = None
+        # round_id -> per-round event inbox, fed by the collector thread
+        self._rounds: Dict[int, "queue.Queue"] = {}
+        self._rounds_lock = threading.Lock()
+        # engine-wide per-worker last-event wall time (written only by the
+        # collector; racy reads are benign).  Distinguishes "silent because
+        # fail-stopped" from "silent because busy with another round's
+        # queued work" — only the former may draw §4.4 strikes.
+        self._worker_last_event = np.zeros(cfg.n_workers, dtype=np.float64)
+        self._collector = threading.Thread(target=self._route_events,
+                                           name="event-collector",
+                                           daemon=True)
+        self._collector.start()
+
+    # ------------------------------------------------------------------
+    # event routing (the pipelining substrate)
+    # ------------------------------------------------------------------
+
+    def _route_events(self) -> None:
+        """Single consumer of the shared queue: fan events out by round_id.
+
+        Events for retired rounds — late cancel acks, chunk results that
+        raced the round's completion — are dropped here, which is what
+        keeps one round's stragglers from ever polluting another round's
+        collection state.
+        """
+        while True:
+            ev = self.events.get()
+            if isinstance(ev, _Shutdown):
+                return
+            worker = getattr(ev, "worker", None)
+            if worker is not None:
+                self._worker_last_event[worker] = getattr(
+                    ev, "t", time.perf_counter())
+            with self._rounds_lock:
+                inbox = self._rounds.get(getattr(ev, "round_id", None))
+            if inbox is not None:
+                inbox.put(ev)
+
+    def _register_round(self) -> Tuple[int, "queue.Queue", int]:
+        with self._lock:
+            self._round_seq += 1
+            rid = self._round_seq
+        inbox: "queue.Queue" = queue.Queue()
+        with self._rounds_lock:
+            self._rounds[rid] = inbox
+            inflight = len(self._rounds)
+        return rid, inbox, inflight
+
+    def _retire_round(self, rid: int) -> None:
+        with self._rounds_lock:
+            self._rounds.pop(rid, None)
+
+    def inflight_rounds(self) -> int:
+        with self._rounds_lock:
+            return len(self._rounds)
+
+    def _engine_last_event(self) -> float:
+        """Wall time of the most recent event from ANY worker (0 = never).
+
+        The liveness bound must not starve a round whose tasks are merely
+        queued behind other rounds' long work: as long as the pool emits
+        events for anyone, FIFO guarantees this round's turn comes.
+        """
+        return float(self._worker_last_event.max())
 
     # ------------------------------------------------------------------
     # tenant data management
@@ -158,17 +280,20 @@ class CodedExecutionEngine:
             w.stop()
         for w in self.workers:
             w.join(timeout=10.0)
+        self.events.put(_Shutdown())
+        self._collector.join(timeout=10.0)
 
     # ------------------------------------------------------------------
     # prediction / observation
     # ------------------------------------------------------------------
 
     def predicted_speeds(self) -> np.ndarray:
-        pred = np.asarray(self.predictor.predict(), dtype=np.float64)
-        pred = np.clip(pred, 1e-3, None)
-        if self.dead:
-            pred[list(self.dead)] = 0.0
-        return pred
+        with self._obs_lock:
+            pred = np.asarray(self.predictor.predict(), dtype=np.float64)
+            pred = np.clip(pred, 1e-3, None)
+            if self.dead:
+                pred[list(self.dead)] = 0.0
+            return pred
 
     def _observe(self, speeds: np.ndarray, response: np.ndarray) -> None:
         """Feed measured speeds to the predictor and strikes to the detector.
@@ -179,38 +304,74 @@ class CodedExecutionEngine:
         workers rather than evicting them), inf for silent ones.  Death
         therefore requires ``dead_after`` consecutive silent rounds — the
         §4.4 fail-stop signal — and never fires on timing noise.
+
+        Called at round boundaries, possibly from several concurrent round
+        drivers — all shared learning state mutates under ``_obs_lock``.
         """
-        prev = (self._last_observed if self._last_observed is not None
-                else np.ones(self.cfg.n_workers))
-        filled = np.where(np.isfinite(speeds), speeds, prev)
-        # a censored (silent-worker) bound can only lower our belief
-        silent = ~np.isfinite(response)
-        filled = np.where(silent & np.isfinite(speeds),
-                          np.minimum(speeds, prev), filled)
-        filled = np.clip(filled, 1e-3, None)
-        self._last_observed = filled
-        self.predictor.observe(filled)
-        heartbeat = np.where(np.isfinite(response), 1.0, np.inf)
-        verdict = self.detector.evaluate(heartbeat)
-        self.dead |= verdict["dead"]
+        with self._obs_lock:
+            prev = (self._last_observed if self._last_observed is not None
+                    else np.ones(self.cfg.n_workers))
+            filled = np.where(np.isfinite(speeds), speeds, prev)
+            # a censored (silent-worker) bound can only lower our belief
+            silent = ~np.isfinite(response)
+            filled = np.where(silent & np.isfinite(speeds),
+                              np.minimum(speeds, prev), filled)
+            filled = np.clip(filled, 1e-3, None)
+            self._last_observed = filled
+            self.predictor.observe(filled)
+            heartbeat = np.where(np.isfinite(response), 1.0, np.inf)
+            verdict = self.detector.evaluate(heartbeat)
+            self.dead |= verdict["dead"]
+            self.iteration += 1
 
     # ------------------------------------------------------------------
-    # public entry: one matvec round under a strategy
+    # public entry: matvec rounds under a strategy
     # ------------------------------------------------------------------
 
     def matvec(self, data, x: np.ndarray, strategy) -> RoundOutput:
-        """Execute one coded (or replicated) matrix–vector round."""
-        with self._lock:
-            x = np.asarray(x, dtype=np.float64)
-            if isinstance(strategy, UncodedReplication):
-                if not isinstance(data, ReplicatedData):
-                    raise TypeError("UncodedReplication needs ReplicatedData "
-                                    "(use engine.load_replicated)")
-                return self._run_replicated(data, x, strategy)
+        """Execute one coded (or replicated) matrix–vector round (blocking)."""
+        return self.matvec_async(data, x, strategy).result()
+
+    def matvec_async(self, data, x: np.ndarray, strategy) -> RoundHandle:
+        """Start one round and return immediately with a :class:`RoundHandle`.
+
+        The round runs on its own driver thread: planning, dispatch, any-k
+        collection, §4.3 timeout/reassign, and decode all proceed while the
+        caller does other work (or starts more rounds — independent rounds
+        share the worker pool chunk-by-chunk).
+        """
+        # snapshot: the caller is free to mutate x the moment this returns
+        # (iterative algorithms update in place), while workers read it for
+        # the whole round
+        x = np.array(x, dtype=np.float64, copy=True)
+        if isinstance(strategy, UncodedReplication):
+            if not isinstance(data, ReplicatedData):
+                raise TypeError("UncodedReplication needs ReplicatedData "
+                                "(use engine.load_replicated)")
+            target = self._run_replicated
+        elif isinstance(strategy, (MDSCoded, BasicS2C2, GeneralS2C2)):
             if not isinstance(data, CodedData):
                 raise TypeError(f"{type(strategy).__name__} needs CodedData "
                                 "(use engine.load_matrix)")
-            return self._run_coded(data, x, strategy)
+            target = self._run_coded
+        else:
+            raise TypeError(f"unsupported strategy {type(strategy).__name__}")
+
+        rid, inbox, inflight = self._register_round()
+        handle = RoundHandle(rid, type(strategy).__name__)
+
+        def drive() -> None:
+            try:
+                out = target(rid, inbox, inflight, data, x, strategy)
+                handle._finish(out, None)
+            except BaseException as exc:    # surfaced via handle.result()
+                handle._finish(None, exc)
+            finally:
+                self._retire_round(rid)
+
+        threading.Thread(target=drive, name=f"round-{rid}",
+                         daemon=True).start()
+        return handle
 
     # ------------------------------------------------------------------
     # coded path (MDSCoded / BasicS2C2 / GeneralS2C2)
@@ -236,95 +397,158 @@ class CodedExecutionEngine:
             alloc = strategy.plan(pred)
             planned = expected_makespan(alloc, pred, data.rows_per_chunk,
                                         self.cfg.row_cost)
+            if not np.isfinite(planned):
+                # a zero-speed (declared-dead) worker still holding chunks
+                # can blow the estimate up to inf/nan: fall back to a plain
+                # full-partition bound so deadlines stay meaningful
+                planned = C * data.rows_per_chunk * self.cfg.row_cost
             return alloc, planned
         raise TypeError(f"unsupported strategy {type(strategy).__name__}")
 
-    def _dispatch(self, state: _RoundState, rid: int, data: CodedData,
-                  x: np.ndarray, worker: int,
+    def _dispatch(self, state: _RoundState, rid: int, iteration: int,
+                  data: CodedData, x: np.ndarray, worker: int,
                   chunk_ids: List[int]) -> None:
         chunk_ids = [c for c in chunk_ids if c not in state.assigned[worker]]
         if not chunk_ids:
             return
         state.assigned[worker].update(chunk_ids)
         task = ChunkTask(
-            round_id=rid, iteration=self.iteration, shard_id=data.shard_id,
+            round_id=rid, iteration=iteration, shard_id=data.shard_id,
             chunks=[(c, *data.chunk_range(c)) for c in chunk_ids],
             x=x, row_cost=self.cfg.row_cost, cancel=threading.Event())
         state.tasks[worker] = task
         state.finish_t[worker] = np.inf
+        state.dispatch_t[worker] = time.perf_counter()
+        state.start_t[worker] = np.nan
         self.workers[worker].submit(task)
 
-    def _run_coded(self, data: CodedData, x: np.ndarray,
-                   strategy) -> RoundOutput:
+    def _run_coded(self, rid: int, inbox: "queue.Queue", inflight: int,
+                   data: CodedData, x: np.ndarray, strategy) -> RoundOutput:
         cfg = self.cfg
         n, k, C = data.n, data.k, data.chunks
         rpc = data.rows_per_chunk
         alloc, planned = self._plan(data, strategy)
         slack = getattr(strategy, "timeout_slack", cfg.timeout_slack)
+        iteration = self.iteration      # snapshot: all dispatches this round
 
-        rid = self._round_seq = self._round_seq + 1
         state = _RoundState(n, k, C)
         t0 = time.perf_counter()
         for w in range(n):
             if alloc.count[w] > 0:
                 ids = [int((alloc.begin[w] + j) % C)
                        for j in range(int(alloc.count[w]))]
-                self._dispatch(state, rid, data, x, w, ids)
+                self._dispatch(state, rid, iteration, data, x, w, ids)
 
         active = {w for w in range(n) if alloc.count[w] > 0}
         # MDSCoded is the conventional baseline: pure any-k collection, no
-        # §4.3 reassignment (that is exactly what S²C² adds on top of it).
+        # §4.3 reassignment (that is exactly what S²C² adds on top of it) —
+        # its allowance is only a generous liveness bound.
         use_timeout = isinstance(strategy, (BasicS2C2, GeneralS2C2))
-        # provisional deadline: even if k workers never finish (fail-stop),
-        # the wave logic must eventually fire and restore liveness.
-        horizon = 1.0 + slack if use_timeout else 20.0
-        deadline = t0 + max(planned, 1e-3) * horizon
-        deadline_frozen = False         # set after the k-finisher arming/wave
+        factor = 1.0 + slack if use_timeout else 20.0
+        # §4.3 under pipelining: the timeout clock runs on each worker's
+        # SERVICE time (from when it began the task — workers stamp
+        # ``t_start`` into their events), not from dispatch.  A task still
+        # queued behind other rounds' work gets a dispatch-anchored
+        # allowance stretched by the live backlog instead.  At inflight=1
+        # start ≈ dispatch and this reduces exactly to the paper's rule.
+        window = max(planned, 1e-3)     # per-worker virtual-time allowance
+        window_frozen = False           # set by k-finisher arming / waves
+        floor_deadline = 0.0            # explicit extensions (no-target case)
         waves = 0
         mispredicted = False
 
+        def current_deadline() -> float:
+            backlog = max(1, self.inflight_rounds())
+            dls = [floor_deadline]
+            for w in state.tasks:
+                if np.isfinite(state.finish_t[w]) or w in state.cancelled:
+                    continue
+                if np.isfinite(state.start_t[w]):
+                    dls.append(state.start_t[w] + window * factor)
+                else:
+                    dls.append(state.dispatch_t[w]
+                               + window * factor * backlog)
+            return max(dls)
+
+        last_arrival = t0
         while state.need > 0:
+            now = time.perf_counter()
+            # clamp every wait to the starvation bound: starvation_timeout
+            # of total event silence is a liveness failure no matter how
+            # far away the (possibly enormous, e.g. dead-worker-dominated)
+            # planned deadline sits
+            deadline = current_deadline()
+            wait = min(max(deadline - now, 1e-4), cfg.starvation_timeout)
             try:
-                ev = self.events.get(
-                    timeout=max(deadline - time.perf_counter(), 1e-4)
-                    if deadline is not None else cfg.starvation_timeout)
+                ev = inbox.get(timeout=wait)
             except queue.Empty:
-                if deadline is None:
+                now = time.perf_counter()
+                # liveness reference: while reassign waves remain, a busy
+                # pool (events for ANY round) buys this round time — FIFO
+                # guarantees its queued tasks get served.  Once waves are
+                # exhausted, only events for THIS round count: other
+                # tenants' progress must not keep an undecodable round
+                # (> n-k fail-stopped workers) blocked forever.
+                ref = (last_arrival if waves > cfg.max_reassign_waves
+                       else max(last_arrival, self._engine_last_event()))
+                if now - ref >= cfg.starvation_timeout:
                     raise RuntimeError(
                         f"cluster starved: round {rid} got no events for "
                         f"{cfg.starvation_timeout}s (need={state.need})")
+                if now < current_deadline():
+                    continue            # clamped probe, deadline not reached
+                if not np.isfinite(state.finish_t).any():
+                    # nobody has finished yet — a §4.3 wave needs a finished
+                    # worker to reassign TO, so extend instead of burning
+                    # one; the clamped wait above still errors out a fully
+                    # dead cluster.
+                    floor_deadline = time.perf_counter() + window * factor
+                    continue
                 # timeout fired with coverage incomplete (§4.3 mis-prediction
                 # path; for MDSCoded only the generous liveness bound)
                 mispredicted = mispredicted or use_timeout
                 waves += 1
                 if waves > cfg.max_reassign_waves:
-                    deadline = None     # final: block until starvation bound
+                    # final: wait out the starvation bound (the no-events
+                    # check above trips it if nothing more arrives)
+                    floor_deadline = time.perf_counter() + \
+                        2 * cfg.starvation_timeout
                     continue
-                extra_planned = self._reassign_wave(state, rid, data, x, t0)
-                deadline = time.perf_counter() + \
-                    max(extra_planned, 1e-3) * (1.0 + slack)
-                deadline_frozen = True
+                extra_planned = self._reassign_wave(state, rid, iteration,
+                                                    data, x, t0)
+                window = max(extra_planned, 1e-3)
+                window_frozen = True
+                floor_deadline = time.perf_counter() + window * factor
                 continue
 
+            last_arrival = time.perf_counter()
             if isinstance(ev, WorkerDone):
                 if ev.round_id != rid or ev.cancelled:
                     continue        # cancel-acks don't count as finishes
                 state.finish_t[ev.worker] = ev.t
                 state.last_event_t[ev.worker] = ev.t
-                if use_timeout and not deadline_frozen:
+                state.start_t[ev.worker] = ev.t_start
+                if not np.isfinite(state.first_start_t[ev.worker]):
+                    state.first_start_t[ev.worker] = ev.t_start
+                if use_timeout and not window_frozen:
                     finished = np.isfinite(state.finish_t)
                     if int(finished.sum()) >= k:
-                        # §4.3: clock = mean of the first k responders,
-                        # floored by the master's own planned makespan
-                        durations = np.sort(state.finish_t[finished] - t0)[:k]
-                        base = max(float(durations.mean()), planned)
-                        deadline = t0 + base * (1.0 + slack)
-                        deadline_frozen = True
+                        # §4.3: clock = mean SERVICE time of the first k
+                        # responders, floored by the master's own planned
+                        # makespan
+                        service = state.finish_t[finished] - \
+                            state.start_t[finished]
+                        durations = np.sort(service)[:k]
+                        window = max(float(durations.mean()), planned)
+                        window_frozen = True
                 continue
             if not isinstance(ev, ChunkDone) or ev.round_id != rid:
                 continue
             w, c = ev.worker, ev.chunk_id
             state.last_event_t[w] = ev.t
+            state.start_t[w] = ev.t_start
+            if not np.isfinite(state.first_start_t[w]):
+                state.first_start_t[w] = ev.t_start
             state.chunks_done[w] += 1
             if len(state.used[c]) < k and w not in state.covered_by[c]:
                 state.covered_by[c].add(w)
@@ -341,14 +565,19 @@ class CodedExecutionEngine:
                 task.cancel.set()
                 state.cancelled.add(w)
 
-        # decode from exactly-k coverage
-        coverage = np.zeros((C, n), dtype=bool)
-        partials = np.zeros((n, C, rpc))
+        # decode from exactly-k coverage: gather the used results compactly
+        # (no dense (n, C, rpc) scratch) and run one batched contraction
+        # into a preallocated block-major buffer (CodedData.decode_compact)
+        ids = np.empty((C, k), dtype=np.int64)
+        y_parts = np.empty((C, k, rpc), dtype=np.float64)
         for c in range(C):
-            for w in state.used[c]:
-                coverage[c, w] = True
-                partials[w, c] = state.partials[(w, c)]
-        y = data.decode(coverage, partials)
+            row = sorted(state.used[c])
+            ids[c] = row
+            for j, w in enumerate(row):
+                y_parts[c, j] = state.partials[(w, c)]
+        dms = data.code.decode_submats(ids)
+        y = data.decode_compact(dms, y_parts,
+                                use_kernel=cfg.decode_with_kernel)
         t_done = time.perf_counter()
 
         # measured speeds: rows · row_cost / response time (§6.2's l_i/t_i).
@@ -360,14 +589,25 @@ class CodedExecutionEngine:
         for w in range(n):
             if w not in active:
                 continue            # zero allocation: no measurement
+            # clock from when the worker actually began serving (== t0 at
+            # inflight=1): queue wait behind other rounds must not read as
+            # slowness or the predictor unlearns every busy worker
+            w_t0 = (state.first_start_t[w]
+                    if np.isfinite(state.first_start_t[w]) else t0)
             if np.isfinite(state.finish_t[w]):
-                el = max(state.finish_t[w] - t0, 1e-9)
+                el = max(state.finish_t[w] - w_t0, 1e-9)
                 speeds[w] = len(state.assigned[w]) * rpc * cfg.row_cost / el
                 response[w] = el
             elif state.chunks_done[w] > 0:
-                el = max(state.last_event_t[w] - t0, 1e-9)
+                el = max(state.last_event_t[w] - w_t0, 1e-9)
                 speeds[w] = state.chunks_done[w] * rpc * cfg.row_cost / el
                 response[w] = el
+            elif self._worker_last_event[w] >= t0:
+                # silent for THIS round but demonstrably alive (events for
+                # other in-flight rounds): its task is just queued behind
+                # other tenants' work.  No measurement, no §4.4 strike —
+                # pipelined queueing must never read as fail-stop.
+                continue
             else:
                 # silent: censored observation — it had work for the whole
                 # round and finished not even one chunk, so its speed is at
@@ -381,7 +621,6 @@ class CodedExecutionEngine:
         neutral = float(np.median(finite)) if finite.size else 0.0
         response = np.where(np.isnan(response), neutral, response)
         self._observe(speeds, response)
-        self.iteration += 1
 
         useful = np.array(
             [sum(1 for c in range(C) if w in state.covered_by[c])
@@ -395,11 +634,12 @@ class CodedExecutionEngine:
             speeds_measured=np.where(np.isfinite(speeds), speeds, 0.0),
             planned_makespan=planned, reassign_waves=waves,
             mispredicted=mispredicted,
-            cancelled_workers=len(state.cancelled))
+            cancelled_workers=len(state.cancelled),
+            inflight=inflight)
         return RoundOutput(y=y, metrics=metrics)
 
-    def _reassign_wave(self, state: _RoundState, rid: int, data: CodedData,
-                       x: np.ndarray, t0: float) -> float:
+    def _reassign_wave(self, state: _RoundState, rid: int, iteration: int,
+                       data: CodedData, x: np.ndarray, t0: float) -> float:
         """§4.3: re-target missing chunk indices to available workers.
 
         Returns the planned (virtual-seconds) makespan of the extra work.
@@ -441,7 +681,7 @@ class CodedExecutionEngine:
         max_extra = 0
         for w, ids in extra.items():
             if ids:
-                self._dispatch(state, rid, data, x, w, ids)
+                self._dispatch(state, rid, iteration, data, x, w, ids)
                 max_extra = max(max_extra, len(ids))
         planned_extra = max_extra * data.rows_per_chunk * self.cfg.row_cost
         if short:
@@ -453,12 +693,13 @@ class CodedExecutionEngine:
     # uncoded replication path (speculative re-execution)
     # ------------------------------------------------------------------
 
-    def _run_replicated(self, data: ReplicatedData, x: np.ndarray,
+    def _run_replicated(self, rid: int, inbox: "queue.Queue", inflight: int,
+                        data: ReplicatedData, x: np.ndarray,
                         strategy: UncodedReplication) -> RoundOutput:
         cfg = self.cfg
         n_parts = len(data.partitions)
         n = cfg.n_workers
-        rid = self._round_seq = self._round_seq + 1
+        iteration = self.iteration
         t0 = time.perf_counter()
         rpp = data.rows_per_part
 
@@ -471,7 +712,7 @@ class CodedExecutionEngine:
         wasted = np.zeros(n)
 
         def launch(p: int, w: int) -> None:
-            task = ChunkTask(round_id=rid, iteration=self.iteration,
+            task = ChunkTask(round_id=rid, iteration=iteration,
                              shard_id=data.part_shard_id(p),
                              chunks=[(p, 0, rpp)], x=x,
                              row_cost=cfg.row_cost, cancel=threading.Event())
@@ -488,11 +729,22 @@ class CodedExecutionEngine:
         deadline = t0 + n_parts * rpp * cfg.row_cost * 20    # liveness bound
         speculated = False
         extensions = 0
+        last_arrival = t0
         while n_done < n_parts:
+            now = time.perf_counter()
+            wait = min(max(deadline - now, 1e-4), cfg.starvation_timeout)
             try:
-                ev = self.events.get(
-                    timeout=max(deadline - time.perf_counter(), 1e-4))
+                ev = inbox.get(timeout=wait)
             except queue.Empty:
+                now = time.perf_counter()
+                if now - max(last_arrival, self._engine_last_event()) >= \
+                        cfg.starvation_timeout:
+                    raise RuntimeError(
+                        f"replicated round {rid}: no events for "
+                        f"{cfg.starvation_timeout}s "
+                        f"({n_parts - n_done} partitions pending)")
+                if now < deadline:
+                    continue            # clamped probe, deadline not reached
                 # a primary died with no idle replica holder: force-launch
                 # every pending partition on ANY idle alive worker holding a
                 # replica.  Keep waiting while an already-launched attempt is
@@ -525,6 +777,7 @@ class CodedExecutionEngine:
                 deadline = time.perf_counter() + n_parts * rpp * cfg.row_cost * 20
                 continue
 
+            last_arrival = time.perf_counter()
             if isinstance(ev, WorkerDone):
                 if ev.round_id == rid:
                     busy.discard(ev.worker)     # idle again either way
@@ -580,6 +833,8 @@ class CodedExecutionEngine:
                           else t_collected) - t0, 1e-9)
                 speeds[w] = rows_done[w] * cfg.row_cost / el
                 response[w] = el
+            elif self._worker_last_event[w] >= t0:
+                continue    # alive on other rounds: no measurement/strike
             else:
                 # silent primary: censored bound (see coded path)
                 speeds[w] = rpp * cfg.row_cost / max(t_done - t0, 1e-9)
@@ -588,7 +843,6 @@ class CodedExecutionEngine:
         neutral = float(np.median(finite)) if finite.size else 0.0
         response = np.where(np.isnan(response), neutral, response)
         self._observe(speeds, response)
-        self.iteration += 1
 
         useful = rows_done - wasted
         metrics = RoundMetrics(
@@ -598,5 +852,6 @@ class CodedExecutionEngine:
             wasted_rows=wasted,
             speeds_measured=np.where(np.isfinite(speeds), speeds, 0.0),
             planned_makespan=rpp * cfg.row_cost,
-            mispredicted=speculated)
+            mispredicted=speculated,
+            inflight=inflight)
         return RoundOutput(y=y, metrics=metrics)

@@ -39,6 +39,7 @@ class RoundMetrics:
     reassign_waves: int = 0
     mispredicted: bool = False
     cancelled_workers: int = 0
+    inflight: int = 1                 # rounds in flight when this one started
 
     @property
     def total_useful(self) -> float:
@@ -103,9 +104,12 @@ class ServiceReport:
     p99_queue_wait: float
     wasted_fraction: float
     by_strategy: Dict[str, Dict[str, float]]
+    max_inflight: int = 1             # scheduler slots of the service
+    peak_inflight: int = 1            # max jobs observed in service at once
 
     @classmethod
-    def from_jobs(cls, jobs: List[JobMetrics], wall_time: float
+    def from_jobs(cls, jobs: List[JobMetrics], wall_time: float,
+                  max_inflight: int = 1, peak_inflight: int = 1
                   ) -> "ServiceReport":
         lat = [j.latency for j in jobs]
         qw = [j.queue_wait for j in jobs]
@@ -137,14 +141,16 @@ class ServiceReport:
             p99_queue_wait=percentile(qw, 99),
             wasted_fraction=wasted / (useful + wasted)
             if (useful + wasted) > 0 else 0.0,
-            by_strategy=by)
+            by_strategy=by, max_inflight=max_inflight,
+            peak_inflight=peak_inflight)
 
     def format(self) -> str:
         lines = [
             f"jobs={self.n_jobs} rounds={self.n_rounds} "
             f"wall={self.wall_time:.2f}s "
             f"throughput={self.jobs_per_s:.1f} jobs/s "
-            f"({self.rounds_per_s:.1f} rounds/s)",
+            f"({self.rounds_per_s:.1f} rounds/s) "
+            f"inflight={self.peak_inflight}/{self.max_inflight}",
             f"latency p50={self.p50_latency * 1e3:.1f}ms "
             f"p99={self.p99_latency * 1e3:.1f}ms  "
             f"queue_wait p50={self.p50_queue_wait * 1e3:.1f}ms "

@@ -1,9 +1,11 @@
 """Multi-tenant job service: bounded queue of heterogeneous coded jobs.
 
-Producers (any thread) submit :class:`Job` objects; a scheduler thread
-drains the queue and runs each job's rounds on the shared
-:class:`~repro.cluster.master.CodedExecutionEngine` — one engine, many
-tenants, each with its own encoded shards, strategy, and accounting.
+Producers (any thread) submit :class:`Job` objects; ``max_inflight``
+scheduler slots drain the queue concurrently and run each job's rounds on
+the shared :class:`~repro.cluster.master.CodedExecutionEngine` — one
+engine, many tenants, each with its own encoded shards, strategy, and
+accounting, with independent tenants' rounds pipelined over the same
+worker pool.
 ``submit`` is non-blocking against a full queue (raises
 :class:`ServiceSaturated` — backpressure, the admission-control behavior a
 serving tier needs), and every job records queue wait, per-round execution
@@ -147,19 +149,36 @@ class JobHandle:
 
 
 class JobService:
-    """Bounded-queue scheduler multiplexing jobs over one engine."""
+    """Bounded-queue, multi-slot scheduler multiplexing jobs over one engine.
 
-    def __init__(self, engine: CodedExecutionEngine, max_queue: int = 256):
+    ``max_inflight`` scheduler slots drain the admission queue
+    concurrently; each slot runs one job's (internally sequential) rounds
+    on the shared engine, which pipelines independent rounds chunk-by-chunk
+    over the worker pool.  With ``max_inflight=1`` this degenerates to the
+    old serialized run loop; higher values overlap one tenant's straggler /
+    collect / decode slack with other tenants' useful compute.
+    """
+
+    def __init__(self, engine: CodedExecutionEngine, max_queue: int = 256,
+                 max_inflight: int = 4):
+        if max_inflight < 1:
+            raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
         self.engine = engine
+        self.max_inflight = max_inflight
         self.queue: "queue.Queue[Optional[JobHandle]]" = queue.Queue(max_queue)
         self.completed: List[JobMetrics] = []
         self._seq = 0
         self._accepted = 0             # jobs actually enqueued (≠ _seq on
         self._lock = threading.Lock()  # saturation — drain waits on these)
+        self._in_service = 0
+        self._peak_inflight = 0        # max jobs observed in service at once
         self._t_open = time.perf_counter()
-        self._thread = threading.Thread(target=self._run, name="job-service",
-                                        daemon=True)
-        self._thread.start()
+        self._threads = [
+            threading.Thread(target=self._run, name=f"job-slot-{i}",
+                             daemon=True)
+            for i in range(max_inflight)]
+        for t in self._threads:
+            t.start()
 
     # -- producer side ------------------------------------------------------
     def submit(self, job: Job) -> JobHandle:
@@ -197,17 +216,28 @@ class JobService:
             time.sleep(0.002)
 
     def close(self) -> None:
-        self.queue.put(None)
-        self._thread.join(timeout=30.0)
+        for _ in self._threads:
+            self.queue.put(None)
+        for t in self._threads:
+            t.join(timeout=30.0)
 
     # -- scheduler side -----------------------------------------------------
     def _run(self) -> None:
+        """One scheduler slot: drain the admission queue, one job at a time.
+
+        Fault isolation is per job and per slot: a failing job records its
+        error and the slot moves on; other slots never notice.
+        """
         while True:
             handle = self.queue.get()
             if handle is None:
                 return
             m = handle.metrics
             m.t_start = time.perf_counter()
+            with self._lock:
+                self._in_service += 1
+                self._peak_inflight = max(self._peak_inflight,
+                                          self._in_service)
             data = None
             try:
                 data = handle.job.prepare(self.engine)
@@ -220,12 +250,21 @@ class JobService:
                     self.engine.unload(data)
             m.t_done = time.perf_counter()
             with self._lock:
+                self._in_service -= 1
                 self.completed.append(m)
             handle.done.set()
 
     # -- reporting ----------------------------------------------------------
+    @property
+    def peak_inflight(self) -> int:
+        with self._lock:
+            return self._peak_inflight
+
     def report(self) -> ServiceReport:
         with self._lock:
             jobs = list(self.completed)
+            peak = self._peak_inflight
         wall = time.perf_counter() - self._t_open
-        return ServiceReport.from_jobs(jobs, wall)
+        return ServiceReport.from_jobs(jobs, wall,
+                                       max_inflight=self.max_inflight,
+                                       peak_inflight=peak)

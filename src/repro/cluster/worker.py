@@ -15,9 +15,15 @@ throttling is real wall-clock, not bookkeeping).  ``s == 0`` ⇒ fail-stop:
 the worker drops the task silently and ignores all future work.
 
 The compute backend is pluggable: the default is the BLAS matvec
-(``a[rows] @ x``); :func:`kernel_backend` routes each chunk through the
-Pallas ``coded_matvec`` kernel (interpret mode off-TPU) — same semantics,
-exercised by the demo to prove the engine drives ``repro.kernels``.
+(``a[rows] @ x``); :class:`KernelBackend` (via :func:`kernel_backend`)
+routes each chunk through the Pallas ``coded_matvec`` kernel (interpret
+mode off-TPU) — same semantics, exercised by the demo to prove the engine
+drives ``repro.kernels``.  A backend may additionally implement the
+shard-aware protocol (``compute_chunk(worker_id, shard_id, shard, r0, r1,
+x)`` plus optional ``drop_shard(worker_id, shard_id)``): the worker then
+hands it the whole shard and the chunk range, which lets the backend keep
+a device-resident copy of each shard instead of re-uploading rows on every
+chunk.
 """
 
 from __future__ import annotations
@@ -26,12 +32,13 @@ import dataclasses
 import queue
 import threading
 import time
+from collections import OrderedDict
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 __all__ = ["ChunkTask", "ChunkDone", "WorkerDone", "Worker",
-           "numpy_backend", "kernel_backend"]
+           "numpy_backend", "kernel_backend", "KernelBackend"]
 
 ComputeFn = Callable[[np.ndarray, np.ndarray], np.ndarray]
 
@@ -63,6 +70,11 @@ class ChunkDone:
     chunk_id: int
     result: np.ndarray
     t: float                       # perf_counter at completion
+    t_start: float = 0.0           # when the worker BEGAN this task — under
+    #                                pipelining that is dequeue time, not
+    #                                dispatch time (tasks queue behind other
+    #                                rounds'); lets the master separate
+    #                                service time from queue wait
 
 
 @dataclasses.dataclass
@@ -79,25 +91,124 @@ class WorkerDone:
     t: float
     chunks_done: int
     cancelled: bool = False
+    t_start: float = 0.0           # see ChunkDone.t_start
 
 
 def numpy_backend(a_rows: np.ndarray, x: np.ndarray) -> np.ndarray:
     return a_rows @ x
 
 
-def kernel_backend(interpret: Optional[bool] = None) -> ComputeFn:
-    """Per-chunk compute through the Pallas coded_matvec kernel."""
-    import jax.numpy as jnp
-    from repro.kernels import ops
+def _next_pow2(x: int, floor: int = 8) -> int:
+    v = floor
+    while v < x:
+        v *= 2
+    return v
 
-    def compute(a_rows: np.ndarray, x: np.ndarray) -> np.ndarray:
+
+class KernelBackend:
+    """Pallas ``coded_matvec`` compute with a device-resident shard cache.
+
+    The naive kernel backend re-uploaded the chunk's shard rows through
+    ``jnp.asarray`` on every single chunk — a host→device copy of the same
+    bytes, thousands of times per job.  This backend implements the
+    worker's shard-aware protocol instead:
+
+    * each (worker_id, shard_id) shard is converted/uploaded ONCE and kept
+      device-resident (float32, the kernel's compute dtype) until the
+      tenant is unloaded (``drop_shard``);
+    * the per-chunk operand x is cached by identity — one task reuses the
+      same vector for all of its chunks;
+    * chunk row counts are bucketed to the next power of two (floor 8), so
+      heterogeneous tenants land on a handful of kernel shapes instead of
+      retracing the jit for every distinct ``rows_per_chunk``.
+
+    One instance is shared by all workers of ONE engine (shard ids are
+    engine-scoped — do not share a backend between engines); cache
+    mutation is lock-guarded, compute itself runs lock-free.  The cache is
+    LRU-capped so a rare drop/compute race (a straggler mid-task while its
+    tenant unloads re-caching an already-dropped shard) stays a bounded
+    cache entry, never an unbounded leak.
+    """
+
+    _SHARD_CACHE_CAP = 128
+
+    def __init__(self, interpret: Optional[bool] = None,
+                 row_bucket_floor: int = 8):
+        import jax.numpy as jnp           # deferred: jax is heavyweight
+        from repro.kernels import ops
+        self._jnp = jnp
+        self._ops = ops
+        self.interpret = interpret
+        self.row_bucket_floor = row_bucket_floor
+        self._lock = threading.Lock()
+        self._shards: "OrderedDict[Tuple[int, str], object]" = OrderedDict()
+        self._x_cache: Tuple[Optional[np.ndarray], object] = (None, None)
+
+    # -- shard-aware protocol ----------------------------------------------
+    def _device_shard(self, worker_id: int, shard_id: str,
+                      shard: np.ndarray):
+        key = (worker_id, shard_id)
+        with self._lock:
+            dev = self._shards.get(key)
+            if dev is not None:
+                self._shards.move_to_end(key)
+        if dev is None:
+            dev = self._jnp.asarray(shard, self._jnp.float32)
+            with self._lock:
+                self._shards[key] = dev
+                while len(self._shards) > self._SHARD_CACHE_CAP:
+                    self._shards.popitem(last=False)
+        return dev
+
+    def _device_x(self, x: np.ndarray):
+        # content-checked against a snapshot, not just identity: callers
+        # legitimately mutate x in place between rounds (e.g. gradient
+        # descent's `w -= ...`) while reusing the same array object
+        with self._lock:
+            cached_np, cached_dev = self._x_cache
+        if (cached_np is not None and cached_np.shape == x.shape
+                and np.array_equal(cached_np, x)):
+            return cached_dev
+        dev = self._jnp.asarray(x, self._jnp.float32)
+        with self._lock:
+            self._x_cache = (x.copy(), dev)
+        return dev
+
+    def compute_chunk(self, worker_id: int, shard_id: str, shard: np.ndarray,
+                      r0: int, r1: int, x: np.ndarray) -> np.ndarray:
+        jnp, ops = self._jnp, self._ops
+        dev = self._device_shard(worker_id, shard_id, shard)
+        rows = r1 - r0
+        bucket = _next_pow2(rows, self.row_bucket_floor)
+        a_rows = dev[r0:r1]
+        if bucket != rows:
+            a_rows = jnp.pad(a_rows, ((0, bucket - rows), (0, 0)))
+        ids = jnp.zeros((1,), jnp.int32)
+        out = ops.coded_matvec(a_rows, self._device_x(x), ids, bucket,
+                               interpret=self.interpret)
+        return np.asarray(out[0][:rows], dtype=np.float64)
+
+    def drop_shard(self, worker_id: int, shard_id: str) -> None:
+        with self._lock:
+            self._shards.pop((worker_id, shard_id), None)
+
+    def cache_info(self) -> dict:
+        with self._lock:
+            return {"shards": len(self._shards)}
+
+    # -- plain ComputeFn fallback ------------------------------------------
+    def __call__(self, a_rows: np.ndarray, x: np.ndarray) -> np.ndarray:
+        jnp, ops = self._jnp, self._ops
         ids = jnp.zeros((1,), jnp.int32)
         out = ops.coded_matvec(jnp.asarray(a_rows, jnp.float32),
                                jnp.asarray(x, jnp.float32), ids,
-                               a_rows.shape[0], interpret=interpret)
+                               a_rows.shape[0], interpret=self.interpret)
         return np.asarray(out[0], dtype=np.float64)
 
-    return compute
+
+def kernel_backend(interpret: Optional[bool] = None) -> KernelBackend:
+    """Chunk compute through the Pallas coded_matvec kernel (cached)."""
+    return KernelBackend(interpret=interpret)
 
 
 class Worker(threading.Thread):
@@ -110,10 +221,15 @@ class Worker(threading.Thread):
         self.events = event_queue
         self.injector = injector
         self.compute = compute
+        # shard-aware backends get the whole shard + chunk range and may
+        # keep a device-resident copy (see KernelBackend)
+        self._compute_chunk = getattr(compute, "compute_chunk", None)
+        self._compute_drop = getattr(compute, "drop_shard", None)
         self.inbox: "queue.Queue[Optional[ChunkTask]]" = queue.Queue()
         self.shards: Dict[str, np.ndarray] = {}
         self._shard_lock = threading.Lock()
         self.dead = False
+        self.busy_s = 0.0           # wall seconds spent computing chunks
 
     # -- shard management (called from the master thread) -------------------
     def install_shard(self, shard_id: str, rows: np.ndarray) -> None:
@@ -123,6 +239,8 @@ class Worker(threading.Thread):
     def drop_shard(self, shard_id: str) -> None:
         with self._shard_lock:
             self.shards.pop(shard_id, None)
+        if self._compute_drop is not None:
+            self._compute_drop(self.worker_id, shard_id)
 
     # -- dispatch ----------------------------------------------------------
     def submit(self, task: ChunkTask) -> None:
@@ -142,34 +260,44 @@ class Worker(threading.Thread):
             self._run_task(task)
 
     def _run_task(self, task: ChunkTask) -> None:
+        t_start = time.perf_counter()
         with self._shard_lock:
             a = self.shards.get(task.shard_id)
         if a is None:               # tenant evicted under us: ack and move on
             self.events.put(WorkerDone(self.worker_id, task.round_id,
                                        time.perf_counter(), 0,
-                                       cancelled=True))
+                                       cancelled=True, t_start=t_start))
             return
         done = 0
         for chunk_id, r0, r1 in task.chunks:
-            if task.cancel.is_set():
-                # cancelled: remaining chunks abandoned, ack so the master
-                # knows this worker is idle again
+            with self._shard_lock:
+                evicted = task.shard_id not in self.shards
+            if task.cancel.is_set() or evicted:
+                # cancelled (or tenant unloaded mid-task): remaining chunks
+                # abandoned, ack so the master knows this worker is idle
                 self.events.put(WorkerDone(self.worker_id, task.round_id,
                                            time.perf_counter(), done,
-                                           cancelled=True))
+                                           cancelled=True, t_start=t_start))
                 return
             s = self.injector.speed(self.worker_id, task.iteration)
             if s <= 0.0:
                 self.dead = True    # fail-stop: no event, ever again
                 return
             t0 = time.perf_counter()
-            y = self.compute(a[r0:r1], task.x)
+            if self._compute_chunk is not None:
+                y = self._compute_chunk(self.worker_id, task.shard_id, a,
+                                        r0, r1, task.x)
+            else:
+                y = self.compute(a[r0:r1], task.x)
             target = (r1 - r0) * task.row_cost / s
             elapsed = time.perf_counter() - t0
             if target > elapsed:
                 time.sleep(target - elapsed)
+            t1 = time.perf_counter()
+            self.busy_s += t1 - t0
             self.events.put(ChunkDone(self.worker_id, task.round_id,
-                                      chunk_id, y, time.perf_counter()))
+                                      chunk_id, y, t1, t_start=t_start))
             done += 1
         self.events.put(WorkerDone(self.worker_id, task.round_id,
-                                   time.perf_counter(), done))
+                                   time.perf_counter(), done,
+                                   t_start=t_start))

@@ -1,0 +1,392 @@
+"""Pipelined multi-round engine: overlapped tenants, async handles, decode
+cache, and round-id isolation of cancellation acks.
+
+Covers the PR-2 tentpole: multiple independent rounds in flight over one
+worker pool (``matvec_async``), §4.3 timeout/reassign firing in one
+tenant's round while another collects, cancel acks never crossing round
+ids, the multi-slot JobService actually overlapping jobs, the cached
+decode-weight path, and the shard-aware kernel backend cache.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.cluster import (ClusterConfig, CodedExecutionEngine,
+                           FailStopInjector, JobService, MatvecJob,
+                           NoSlowdown, TraceInjector)
+from repro.cluster.worker import KernelBackend, WorkerDone, kernel_backend
+from repro.core.coding import MDSCode, decode_matrix
+from repro.core.strategies import GeneralS2C2, MDSCoded
+from repro.core.traces import controlled_traces
+
+RNG = np.random.default_rng(11)
+
+
+def make_engine(n, k, injector, row_cost=2e-4, **kw):
+    return CodedExecutionEngine(
+        ClusterConfig(n_workers=n, k=k, row_cost=row_cost, **kw),
+        injector=injector)
+
+
+class TestAsyncRounds:
+    N, K, C, D = 8, 6, 10, 480
+
+    def test_matvec_async_returns_immediately_and_is_exact(self):
+        a = RNG.standard_normal((self.D, 32))
+        x = RNG.standard_normal(32)
+        eng = make_engine(self.N, self.K, NoSlowdown())
+        try:
+            data = eng.load_matrix(a, chunks=self.C)
+            strat = GeneralS2C2(self.N, self.K, self.D, chunks=self.C)
+            t0 = time.perf_counter()
+            h = eng.matvec_async(data, x, strat)
+            submit_t = time.perf_counter() - t0
+            out = h.result(timeout=60)
+            # submission must not block on the round (round >= 10ms of
+            # virtual time; the async call returns in well under that)
+            assert submit_t < out.metrics.makespan / 2
+            assert h.done()
+            np.testing.assert_allclose(out.y, a @ x, rtol=1e-9, atol=1e-9)
+        finally:
+            eng.shutdown()
+
+    def test_two_tenants_overlap_and_decode_exactly(self):
+        """Rounds of independent tenants run concurrently on one pool and
+        both decode exactly, repeatedly."""
+        a = RNG.standard_normal((self.D, 32))
+        b = RNG.standard_normal((self.D, 32))
+        x = RNG.standard_normal(32)
+        eng = make_engine(self.N, self.K, NoSlowdown())
+        try:
+            da = eng.load_matrix(a, chunks=self.C)
+            db = eng.load_matrix(b, chunks=self.C)
+            strat = GeneralS2C2(self.N, self.K, self.D, chunks=self.C)
+            saw_overlap = False
+            for _ in range(4):
+                ha = eng.matvec_async(da, x, strat)
+                hb = eng.matvec_async(db, x, MDSCoded(self.N, self.K, self.D))
+                oa, ob = ha.result(timeout=60), hb.result(timeout=60)
+                assert oa.metrics.round_id != ob.metrics.round_id
+                saw_overlap = saw_overlap or max(
+                    oa.metrics.inflight, ob.metrics.inflight) >= 2
+                np.testing.assert_allclose(oa.y, a @ x, rtol=1e-9, atol=1e-9)
+                np.testing.assert_allclose(ob.y, b @ x, rtol=1e-9, atol=1e-9)
+            assert saw_overlap     # the second round really was in flight
+        finally:
+            eng.shutdown()
+
+    def test_reassign_in_one_round_while_other_collects(self):
+        """§4.3 fires in the straggler-hit tenant's round while another
+        tenant's round is in flight; cancellation acks stay within their
+        round (both outputs exact every time)."""
+        n, k, chunks, d = 8, 6, 10, 480
+        a = RNG.standard_normal((d, 32))
+        b = RNG.standard_normal((d, 32))
+        x = RNG.standard_normal(32)
+        tr = np.ones((40, n))
+        tr[:, 0] = 0.02                 # collapsed worker from the start:
+        #                                 the cold predictor assumes 1.0,
+        #                                 so round 1 mispredicts -> waves
+        eng = make_engine(n, k, TraceInjector(tr), row_cost=1e-4)
+        try:
+            da = eng.load_matrix(a, chunks=chunks)
+            db = eng.load_matrix(b, chunks=chunks)
+            strat = GeneralS2C2(n, k, d, chunks=chunks)
+            waves = 0
+            for _ in range(4):
+                ha = eng.matvec_async(da, x, strat)
+                hb = eng.matvec_async(db, x, strat)
+                oa, ob = ha.result(timeout=60), hb.result(timeout=60)
+                waves += oa.metrics.reassign_waves + ob.metrics.reassign_waves
+                np.testing.assert_allclose(oa.y, a @ x, rtol=1e-9, atol=1e-9)
+                np.testing.assert_allclose(ob.y, b @ x, rtol=1e-9, atol=1e-9)
+            assert waves >= 1          # the timeout/reassign path really ran
+        finally:
+            eng.shutdown()
+
+    def test_stale_cancel_ack_is_dropped_not_misrouted(self):
+        """An event carrying a retired round id must be dropped by the
+        collector — it can never land in a live round's inbox."""
+        eng = make_engine(4, 2, NoSlowdown(), row_cost=1e-6)
+        try:
+            a = RNG.standard_normal((64, 8))
+            x = RNG.standard_normal(8)
+            data = eng.load_matrix(a, chunks=4)
+            strat = GeneralS2C2(4, 2, 64, chunks=4)
+            out1 = eng.matvec(data, x, strat)
+            # forge a late cancel ack from a long-retired round
+            eng.events.put(WorkerDone(worker=0,
+                                      round_id=out1.metrics.round_id,
+                                      t=time.perf_counter(), chunks_done=0,
+                                      cancelled=True))
+            out2 = eng.matvec(data, x, strat)
+            np.testing.assert_allclose(out2.y, a @ x, rtol=1e-9, atol=1e-9)
+            assert eng.inflight_rounds() == 0
+        finally:
+            eng.shutdown()
+
+    def test_undecodable_round_starves_with_error_not_hang(self):
+        """> n-k fail-stopped workers make the round undecodable: it must
+        raise "cluster starved" within ~starvation_timeout of event
+        silence, never loop forever (regression: the wave/extension cycle
+        used to re-arm the deadline a hair under the starvation bound)."""
+        n, k = 4, 3
+        a = RNG.standard_normal((64, 8))
+        x = RNG.standard_normal(8)
+        eng = make_engine(n, k, FailStopInjector({0: 0, 1: 0}),
+                          row_cost=1e-4, starvation_timeout=2.0)
+        try:
+            data = eng.load_matrix(a, chunks=4)
+            t0 = time.perf_counter()
+            with pytest.raises(RuntimeError, match="starved"):
+                eng.matvec(data, x, GeneralS2C2(n, k, 64, chunks=4))
+            assert time.perf_counter() - t0 < 10.0
+        finally:
+            eng.shutdown()
+
+    def test_undecodable_round_starves_even_while_engine_busy(self):
+        """Other tenants' events must not keep an undecodable round blocked
+        forever: once reassign waves are exhausted, starvation is judged on
+        the round's OWN silence."""
+        from repro.cluster import replica_placement
+        from repro.core.strategies import UncodedReplication
+        n, k = 4, 3
+        a = RNG.standard_normal((64, 8))
+        x = RNG.standard_normal(8)
+        eng = make_engine(n, k, FailStopInjector({0: 0, 1: 0}),
+                          row_cost=1e-4, starvation_timeout=2.0)
+        try:
+            coded = eng.load_matrix(a, chunks=4)
+            repl = eng.load_replicated(a, replica_placement(n, 3, seed=2))
+            stop = threading.Event()
+
+            def background_traffic():
+                # replicated rounds recover via replicas of the dead
+                # primaries and keep the event plane busy
+                while not stop.is_set():
+                    try:
+                        eng.matvec(repl, x, UncodedReplication(n, 64))
+                    except RuntimeError:
+                        break
+            t = threading.Thread(target=background_traffic, daemon=True)
+            t.start()
+            try:
+                handle = eng.matvec_async(coded, x,
+                                          GeneralS2C2(n, k, 64, chunks=4))
+                t0 = time.perf_counter()
+                with pytest.raises(RuntimeError, match="starved"):
+                    handle.result(timeout=30)
+                assert time.perf_counter() - t0 < 20.0
+            finally:
+                stop.set()
+                t.join(timeout=30)
+        finally:
+            eng.shutdown()
+
+    def test_busy_worker_is_not_fail_stop_detected(self):
+        """A worker whose task queues behind other rounds' work is silent
+        for a round but alive engine-wide — it must draw no §4.4 strikes."""
+        n, k, chunks, d = 6, 4, 8, 192
+        a = RNG.standard_normal((d, 16))
+        x = RNG.standard_normal(16)
+        eng = make_engine(n, k, NoSlowdown(), row_cost=2e-4,
+                          detector_dead_after=2)
+        try:
+            data = eng.load_matrix(a, chunks=chunks)
+            strat = GeneralS2C2(n, k, d, chunks=chunks)
+            handles = [eng.matvec_async(data, x, strat) for _ in range(6)]
+            for h in handles:
+                np.testing.assert_allclose(h.result(timeout=60).y, a @ x,
+                                           rtol=1e-9, atol=1e-9)
+            assert not eng.dead
+        finally:
+            eng.shutdown()
+
+
+class TestServiceOverlap:
+    def test_multi_slot_scheduler_overlaps_jobs(self):
+        n, k, chunks, d = 6, 4, 8, 192
+        traces = controlled_traces(n, 200, n_stragglers=1, seed=3)
+        eng = make_engine(n, k, TraceInjector(traces), row_cost=2e-4)
+        svc = JobService(eng, max_queue=64, max_inflight=3)
+        try:
+            rng = np.random.default_rng(5)
+            refs, handles = [], []
+            for _ in range(6):
+                a = rng.standard_normal((d, 16))
+                xs = [rng.standard_normal(16) for _ in range(2)]
+                refs.append((a, xs))
+                handles.append(svc.submit(
+                    MatvecJob(a, xs, GeneralS2C2(n, k, d, chunks=chunks),
+                              chunks=chunks)))
+            svc.drain(timeout=120)
+            rep = svc.report()
+            assert rep.max_inflight == 3
+            assert svc.peak_inflight >= 2      # jobs really overlapped
+            assert all(m.error is None for m in svc.completed)
+            for (a, xs), h in zip(refs, handles):
+                want = np.stack([a @ x for x in xs])
+                np.testing.assert_allclose(h.output, want, rtol=1e-9,
+                                           atol=1e-9)
+        finally:
+            svc.close()
+            eng.shutdown()
+
+    def test_max_inflight_one_still_serializes(self):
+        eng = make_engine(4, 2, NoSlowdown(), row_cost=1e-6)
+        svc = JobService(eng, max_queue=16, max_inflight=1)
+        try:
+            rng = np.random.default_rng(5)
+            a = rng.standard_normal((64, 8))
+            for _ in range(4):
+                svc.submit(MatvecJob(a, [rng.standard_normal(8)],
+                                     GeneralS2C2(4, 2, 64, chunks=4),
+                                     chunks=4))
+            svc.drain(timeout=60)
+            assert svc.peak_inflight == 1
+            assert all(m.error is None for m in svc.completed)
+        finally:
+            svc.close()
+            eng.shutdown()
+
+    def test_bad_max_inflight_rejected(self):
+        eng = make_engine(4, 2, NoSlowdown(), row_cost=1e-6)
+        try:
+            with pytest.raises(ValueError):
+                JobService(eng, max_inflight=0)
+        finally:
+            eng.shutdown()
+
+
+class TestDecodeCache:
+    def test_decode_matrix_solve_matches_inv(self):
+        """Satellite parity: np.linalg.solve path vs the old explicit
+        inverse, across generators and responder sets."""
+        for kind in ("systematic_cauchy", "vandermonde",
+                     "chebyshev_vandermonde"):
+            code = MDSCode(8, 5, kind)
+            rng = np.random.default_rng(1)
+            for _ in range(10):
+                ids = np.sort(rng.choice(8, size=5, replace=False))
+                got = decode_matrix(code.generator, ids)
+                want = np.linalg.inv(code.generator[ids])
+                np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-11)
+
+    def test_cached_weights_bit_identical_and_hit(self):
+        code = MDSCode(8, 6)
+        cov = np.zeros((12, 8), dtype=bool)
+        for c in range(12):
+            for j in range(6):
+                cov[c, (c + j) % 8] = True
+        w1 = code.chunk_decode_weights(cov)
+        info1 = code.decode_cache_info()
+        w2 = code.chunk_decode_weights(cov)
+        info2 = code.decode_cache_info()
+        assert w2 is w1                     # full-pattern cache hit
+        assert info2["hits"] > info1["hits"]
+        w_nc = code.chunk_decode_weights(cov, use_cache=False)
+        assert np.array_equal(w1, w_nc)     # bit-identical to uncached
+        code.decode_cache_clear()
+        assert code.decode_cache_info()["submats"] == 0
+
+    def test_compact_weights_consistent_with_full(self):
+        code = MDSCode(7, 4)
+        rng = np.random.default_rng(2)
+        cov = np.zeros((9, 7), dtype=bool)
+        for c in range(9):
+            cov[c, rng.choice(7, size=4 + (c % 2), replace=False)] = True
+        full = code.chunk_decode_weights(cov, use_cache=False)
+        dms, ids = code.chunk_decode_weights_compact(cov, use_cache=False)
+        for c in range(9):
+            np.testing.assert_array_equal(full[c][:, ids[c]], dms[c])
+            # zero everywhere else
+            mask = np.ones(7, dtype=bool)
+            mask[ids[c]] = False
+            assert np.all(full[c][:, mask] == 0.0)
+
+    def test_decode_bit_stable_for_repeated_coverage(self):
+        """Same coverage pattern -> cached weights -> byte-identical
+        decode, and exact against the uncoded reference."""
+        from repro.cluster.data import CodedData
+        code = MDSCode(6, 4)
+        rng = np.random.default_rng(3)
+        a = rng.standard_normal((192, 16))
+        x = rng.standard_normal(16)
+        data = CodedData.encode("t", a, code, chunks=8)
+        cov = np.zeros((8, 6), dtype=bool)
+        partials = np.zeros((6, 8, data.rows_per_chunk))
+        for c in range(8):
+            ids = rng.choice(6, size=4, replace=False)
+            cov[c, ids] = True
+            r0, r1 = data.chunk_range(c)
+            for w in ids:
+                partials[w, c] = data.partitions[w][r0:r1] @ x
+        y1 = data.decode(cov, partials)             # populates the cache
+        y2 = data.decode(cov, partials)             # cache hit
+        y3 = data.decode(cov, partials, use_cache=False)
+        np.testing.assert_allclose(y1, a @ x, rtol=1e-9, atol=1e-9)
+        assert np.array_equal(y1, y2)
+        assert np.array_equal(y1, y3)   # cached == uncached, bit for bit
+        # explicit opt-in kernel route (float32, Pallas interpret off-TPU):
+        # same decode within f32 tolerance
+        yk = data.decode(cov, partials, use_kernel=True)
+        np.testing.assert_allclose(yk, a @ x, rtol=1e-3, atol=1e-3)
+
+
+class TestKernelBackendCache:
+    def test_shard_cache_populates_and_evicts(self):
+        backend = kernel_backend()
+        assert isinstance(backend, KernelBackend)
+        n, k, chunks = 4, 2, 4
+        eng = CodedExecutionEngine(
+            ClusterConfig(n_workers=n, k=k, row_cost=1e-6),
+            injector=NoSlowdown(), compute=backend)
+        try:
+            a = RNG.standard_normal((64, 16))
+            x = RNG.standard_normal(16)
+            data = eng.load_matrix(a, chunks=chunks)
+            out = eng.matvec(data, x, GeneralS2C2(n, k, 64, chunks=chunks))
+            np.testing.assert_allclose(out.y, a @ x, rtol=1e-4, atol=1e-4)
+            # every worker's shard uploaded exactly once
+            assert backend.cache_info()["shards"] == n
+            out2 = eng.matvec(data, x, GeneralS2C2(n, k, 64, chunks=chunks))
+            np.testing.assert_allclose(out2.y, a @ x, rtol=1e-4, atol=1e-4)
+            assert backend.cache_info()["shards"] == n   # no re-upload
+            eng.unload(data)
+            assert backend.cache_info()["shards"] == 0   # evicted with tenant
+        finally:
+            eng.shutdown()
+
+    def test_inplace_mutated_x_is_not_served_stale(self):
+        """Regression: the device-x cache must content-check, not identity-
+        check — gradient descent mutates w in place and reuses the array."""
+        backend = kernel_backend()
+        a = np.arange(32, dtype=np.float64).reshape(4, 8)
+        x = np.ones(8)
+        y1 = backend.compute_chunk(0, "s", a, 0, 4, x)
+        np.testing.assert_allclose(y1, a @ x, rtol=1e-5, atol=1e-5)
+        x[:] = 2.0                      # same object, new contents
+        y2 = backend.compute_chunk(0, "s", a, 0, 4, x)
+        np.testing.assert_allclose(y2, a @ x, rtol=1e-5, atol=1e-5)
+        assert not np.allclose(y1, y2)
+
+    def test_row_bucketing_handles_odd_chunk_sizes(self):
+        """Chunk rows that are not a power of two are padded to the bucket
+        and sliced back — results exact vs the BLAS reference."""
+        backend = kernel_backend()
+        n, k, chunks = 4, 2, 5          # 120 rows -> rpc=12 (pads to 16)
+        eng = CodedExecutionEngine(
+            ClusterConfig(n_workers=n, k=k, row_cost=1e-6),
+            injector=NoSlowdown(), compute=backend)
+        try:
+            a = RNG.standard_normal((120, 8))
+            x = RNG.standard_normal(8)
+            data = eng.load_matrix(a, chunks=chunks)
+            assert data.rows_per_chunk == 12
+            out = eng.matvec(data, x, GeneralS2C2(n, k, 120, chunks=chunks))
+            np.testing.assert_allclose(out.y, a @ x, rtol=1e-4, atol=1e-4)
+        finally:
+            eng.shutdown()
