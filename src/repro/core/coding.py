@@ -28,8 +28,10 @@ completion pattern use :func:`decode_matrix` once and apply it as a matmul
 from __future__ import annotations
 
 import dataclasses
+import threading
+from collections import OrderedDict
 from functools import partial
-from typing import Sequence
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -147,7 +149,9 @@ def decode_matrix(g: np.ndarray, workers: Sequence[int]) -> np.ndarray:
     if workers.shape[0] != k:
         raise ValueError(f"need exactly k={k} workers, got {workers.shape[0]}")
     sub = np.asarray(g, dtype=np.float64)[workers]
-    return np.linalg.inv(sub)
+    # LU solve against the identity RHS instead of an explicit inverse:
+    # better conditioned and the same primitive the batched path uses.
+    return np.linalg.solve(sub, np.eye(k, dtype=np.float64))
 
 
 @partial(jax.jit, static_argnames=())
@@ -171,17 +175,35 @@ def decode_from_any_k(g_sub: jax.Array, results: jax.Array) -> jax.Array:
 
 @dataclasses.dataclass(frozen=True)
 class MDSCode:
-    """An (n, k)-MDS code with helpers bound to a concrete generator."""
+    """An (n, k)-MDS code with helpers bound to a concrete generator.
+
+    Decode weights are cached per instance: responder sets repeat heavily
+    across rounds (the predictor converges, so the same workers keep
+    covering the same chunk indices), so both the k×k decode submatrices
+    (keyed by responder-id tuple) and fully-assembled per-round weight
+    tables (keyed by the whole (chunks, k) responder pattern) live in
+    thread-safe LRU caches.  Misses are solved in one batched
+    ``np.linalg.solve`` per call instead of a Python loop of inversions.
+    """
 
     n: int
     k: int
     kind: str = "systematic_cauchy"
+
+    _SUBMAT_CACHE_CAP = 4096        # distinct responder k-tuples
+    _PATTERN_CACHE_CAP = 512        # distinct full-round coverage patterns
 
     def __post_init__(self):
         g = make_generator(self.n, self.k, self.kind)
         if not _check_mds(g):
             raise ValueError(f"generator ({self.n},{self.k},{self.kind}) failed MDS spot-check")
         object.__setattr__(self, "_g", g)
+        # LRU caches + stats; mutable state on a frozen dataclass is fine —
+        # hash/eq stay keyed on (n, k, kind) only.
+        object.__setattr__(self, "_cache_lock", threading.Lock())
+        object.__setattr__(self, "_submat_cache", OrderedDict())
+        object.__setattr__(self, "_pattern_cache", OrderedDict())
+        object.__setattr__(self, "_cache_stats", {"hits": 0, "misses": 0})
 
     @property
     def generator(self) -> np.ndarray:
@@ -210,7 +232,74 @@ class MDSCode:
         return blocks.reshape((-1,) + blocks.shape[2:])
 
     # -- chunked (S²C²) decoding -------------------------------------------
-    def chunk_decode_weights(self, coverage: np.ndarray) -> np.ndarray:
+    def _coverage_ids(self, coverage: np.ndarray) -> np.ndarray:
+        """(num_chunks, n) bool coverage -> (num_chunks, k) first-k ids."""
+        coverage = np.asarray(coverage, dtype=bool)
+        num_chunks, n = coverage.shape
+        if n != self.n:
+            raise ValueError(f"coverage has n={n}, code has n={self.n}")
+        counts = coverage.sum(axis=1)
+        if (counts < self.k).any():
+            c = int(np.argmax(counts < self.k))
+            raise ValueError(
+                f"chunk {c} covered by {int(counts[c])} < k={self.k} workers: "
+                "S²C² decodability violated")
+        # stable argsort on ~coverage puts covered ids first, ascending —
+        # same "(the first) k covering workers" convention as the old loop
+        return np.argsort(~coverage, axis=1, kind="stable")[:, : self.k]
+
+    def decode_submats(self, ids: np.ndarray,
+                       use_cache: bool = True) -> np.ndarray:
+        """Batched decode submatrices for responder-id rows.
+
+        ids: (num_chunks, k) int — each row the k responders of one chunk,
+        in the column order the caller will feed partials.  Returns
+        D: (num_chunks, k, k) with ``D[c] @ partials_of(ids[c])`` the
+        decoded chunk blocks.  Rows repeating a responder tuple hit the
+        per-tuple LRU; all misses are solved in ONE batched
+        ``np.linalg.solve`` call.
+        """
+        ids = np.asarray(ids, dtype=np.int64)
+        num_chunks, k = ids.shape
+        if k != self.k:
+            raise ValueError(f"ids has k={k}, code has k={self.k}")
+        uniq, inverse = np.unique(ids, axis=0, return_inverse=True)
+        u = uniq.shape[0]
+        dms = np.empty((u, k, k), dtype=np.float64)
+        missing: list = []              # (slot, tuple) pairs to solve
+        if use_cache:
+            with self._cache_lock:
+                cache = self._submat_cache
+                for i in range(u):
+                    key = tuple(int(v) for v in uniq[i])
+                    hit = cache.get(key)
+                    if hit is not None:
+                        cache.move_to_end(key)
+                        dms[i] = hit
+                    else:
+                        missing.append((i, key))
+                self._cache_stats["hits"] += u - len(missing)
+                self._cache_stats["misses"] += len(missing)
+        else:
+            missing = [(i, tuple(int(v) for v in uniq[i])) for i in range(u)]
+        if missing:
+            slots = np.array([i for i, _ in missing], dtype=np.int64)
+            subs = self._g[uniq[slots]]                 # (m, k, k)
+            eye = np.empty_like(subs)
+            eye[:] = np.eye(k, dtype=np.float64)
+            solved = np.linalg.solve(subs, eye)         # one batched LU
+            dms[slots] = solved
+            if use_cache:
+                with self._cache_lock:
+                    cache = self._submat_cache
+                    for (_, key), dm in zip(missing, solved):
+                        cache[key] = dm
+                    while len(cache) > self._SUBMAT_CACHE_CAP:
+                        cache.popitem(last=False)
+        return dms[inverse]
+
+    def chunk_decode_weights(self, coverage: np.ndarray,
+                             use_cache: bool = True) -> np.ndarray:
         """Per-chunk decode weights for S²C² partial results.
 
         coverage: (num_chunks, n) boolean — worker w computed chunk c.
@@ -220,17 +309,56 @@ class MDSCode:
 
         Raises if some chunk is covered by fewer than k workers —
         that is a violation of the S²C² decodability invariant.
+
+        Results for a whole coverage pattern are LRU-cached (responder
+        sets repeat heavily across rounds); the returned array is shared
+        with the cache and must not be mutated by the caller.
         """
-        num_chunks, n = coverage.shape
-        if n != self.n:
-            raise ValueError(f"coverage has n={n}, code has n={self.n}")
+        ids = self._coverage_ids(coverage)
+        key = None
+        if use_cache:
+            key = ids.tobytes()
+            with self._cache_lock:
+                hit = self._pattern_cache.get(key)
+                if hit is not None:
+                    self._pattern_cache.move_to_end(key)
+                    self._cache_stats["hits"] += 1
+                    return hit
+                self._cache_stats["misses"] += 1
+        num_chunks = ids.shape[0]
+        dms = self.decode_submats(ids, use_cache=use_cache)
         w = np.zeros((num_chunks, self.k, self.n), dtype=np.float64)
-        for c in range(num_chunks):
-            ids = np.nonzero(coverage[c])[0]
-            if ids.shape[0] < self.k:
-                raise ValueError(
-                    f"chunk {c} covered by {ids.shape[0]} < k={self.k} workers: "
-                    "S²C² decodability violated")
-            ids = ids[: self.k]
-            w[c][:, ids] = decode_matrix(self.generator, ids)
+        idx = np.broadcast_to(ids[:, None, :], dms.shape)
+        np.put_along_axis(w, idx, dms, axis=2)
+        if use_cache:
+            w.setflags(write=False)     # shared with the cache
+            with self._cache_lock:
+                self._pattern_cache[key] = w
+                while len(self._pattern_cache) > self._PATTERN_CACHE_CAP:
+                    self._pattern_cache.popitem(last=False)
         return w
+
+    def chunk_decode_weights_compact(
+            self, coverage: np.ndarray,
+            use_cache: bool = True) -> Tuple[np.ndarray, np.ndarray]:
+        """Compact variant: (D: (num_chunks, k, k), ids: (num_chunks, k)).
+
+        ``D[c] @ partials[ids[c], c]`` recovers chunk c's data blocks —
+        the engine's hot path, which never materializes the zero columns
+        of the full (num_chunks, k, n) table.
+        """
+        ids = self._coverage_ids(coverage)
+        return self.decode_submats(ids, use_cache=use_cache), ids
+
+    def decode_cache_info(self) -> dict:
+        """Cache observability: hits/misses plus current sizes."""
+        with self._cache_lock:
+            return {**self._cache_stats,
+                    "submats": len(self._submat_cache),
+                    "patterns": len(self._pattern_cache)}
+
+    def decode_cache_clear(self) -> None:
+        with self._cache_lock:
+            self._submat_cache.clear()
+            self._pattern_cache.clear()
+            self._cache_stats.update(hits=0, misses=0)
