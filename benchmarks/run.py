@@ -2,9 +2,14 @@
 
 Prints ``name,us_per_call,derived`` CSV and, when the cluster modules ran,
 writes the machine-readable perf baseline ``BENCH_cluster.json`` (round
-makespans, decode times, service jobs/s) next to the repo root so future
-PRs have a regression trajectory.  Usage:
+makespans, decode times, service jobs/s, and — from the throughput
+module — work-stealing counters: per-inflight ``steals`` /
+``retracted_chunks`` / ``pool_idle_frac`` plus the ``service/steal_ab``
+pool-util A/B) next to the repo root so future PRs have a regression
+trajectory.  Exits non-zero if any selected module raises, so CI fails
+loudly instead of shipping a silently-empty baseline.  Usage:
     PYTHONPATH=src python -m benchmarks.run [--only fig8]
+    PYTHONPATH=src python -m benchmarks.run --only cluster,throughput
 """
 
 from __future__ import annotations
@@ -35,15 +40,17 @@ BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / \
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module tags/names to run")
     ap.add_argument("--bench-out", default=str(BENCH_PATH),
                     help="where to write the JSON perf baseline")
     args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
     csv = Csv()
     print("name,us_per_call,derived")
     failures = 0
     for tag, modname in MODULES:
-        if args.only and args.only not in (tag, modname):
+        if only is not None and not only & {tag, modname}:
             continue
         try:
             import importlib

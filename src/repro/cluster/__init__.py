@@ -38,12 +38,13 @@ from repro.cluster.metrics import JobMetrics, RoundMetrics, ServiceReport
 from repro.cluster.service import (JobService, MatvecJob, PageRankJob,
                                    RegressionJob, ServiceSaturated)
 from repro.cluster.worker import (ChunkDone, KernelBackend, Worker,
-                                  WorkerDone, kernel_backend)
+                                  WorkerDone, WorkerFailed, kernel_backend)
 
 __all__ = [
     "BurstyInjector", "FailStopInjector", "NoSlowdown", "SlowdownInjector",
     "TraceInjector",
-    "ChunkDone", "KernelBackend", "Worker", "WorkerDone", "kernel_backend",
+    "ChunkDone", "KernelBackend", "Worker", "WorkerDone", "WorkerFailed",
+    "kernel_backend",
     "CodedData", "ReplicatedData", "replica_placement",
     "ClusterConfig", "CodedExecutionEngine", "RoundHandle", "RoundOutput",
     "RoundMetrics", "JobMetrics", "ServiceReport",

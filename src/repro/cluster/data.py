@@ -20,7 +20,7 @@ tenant's shard id, so one engine serves many jobs concurrently.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -87,6 +87,29 @@ class CodedData:
     def chunk_range(self, chunk_id: int) -> tuple:
         r0 = chunk_id * self.rows_per_chunk
         return r0, r0 + self.rows_per_chunk
+
+    def gather_used(self, used: Sequence[Sequence[int]],
+                    partials: Dict[Tuple[int, int], np.ndarray]
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Compact (ids, y_parts) gather of exactly-k per-chunk coverage.
+
+        used: per chunk, the k workers whose results were collected;
+        partials: (worker, chunk) -> that worker's chunk result.
+
+        Responders are SORTED per chunk, which makes the downstream decode
+        a pure function of each chunk's coverage *set* — the order workers
+        happened to finish (or whether a chunk was stolen mid-round) can
+        never change the decoded bits.
+        """
+        C, k, rpc = self.chunks, self.k, self.rows_per_chunk
+        ids = np.empty((C, k), dtype=np.int64)
+        y_parts = np.empty((C, k, rpc), dtype=np.float64)
+        for c in range(C):
+            row = sorted(used[c])
+            ids[c] = row
+            for j, w in enumerate(row):
+                y_parts[c, j] = partials[(w, c)]
+        return ids, y_parts
 
     def decode(self, coverage: np.ndarray, partials: np.ndarray,
                use_cache: bool = True,

@@ -32,6 +32,24 @@ slack-squeezing.  Cancellation events carry their ``round_id`` and are
 routed (or dropped, once the round retired) strictly by it, so a late
 cancel ack can never count against another round.
 
+**Work stealing.**  Worker inboxes are chunk-granular deques the master
+may retract from and reorder (see :mod:`repro.cluster.worker`), and the
+engine runs an *idle-triggered steal pass*: whenever an event leaves a
+worker idle while a round's coverage is incomplete, the round's driver
+retracts queued (provably not-yet-started) coverage chunks from the most
+backlogged workers and re-dispatches the same chunk indices to the idle
+worker.  Stealing transfers the coverage *obligation*, never rows — every
+worker computes a stolen chunk from its **own** coded shard (the S²C²
+placement invariant), so the steal moves zero matrix bytes.  Steals
+compose with §4.3: a retracted chunk is removed from the donor's
+assignment and outstanding set atomically, so it can neither double-count
+coverage nor earn the donor deadline credit, and reassign waves /
+cancel-ack isolation see exactly the same per-round accounting they always
+did.  ``ClusterConfig(enable_stealing=False)`` restores the pure-FIFO
+engine; decoded outputs are a function of each chunk's coverage *set*
+only (``CodedData.gather_used`` sorts responders), so the two modes decode
+bit-identically whenever coverage matches.
+
 Speed observation closes the paper's §6.2 loop: measured speeds
 (rows · row_cost / response time) feed the shared
 :class:`~repro.core.predictor.SpeedPredictor`, whose predictions feed the
@@ -44,6 +62,7 @@ predictor/detector state is updated under one lock at round boundaries.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import queue
 import threading
 import time
@@ -55,7 +74,7 @@ from repro.cluster.data import CodedData, ReplicatedData
 from repro.cluster.injectors import SlowdownInjector
 from repro.cluster.metrics import RoundMetrics
 from repro.cluster.worker import (ChunkDone, ChunkTask, ComputeFn, Worker,
-                                  WorkerDone, numpy_backend)
+                                  WorkerDone, WorkerFailed, numpy_backend)
 from repro.core.coding import MDSCode
 from repro.core.predictor import SpeedPredictor
 from repro.core.s2c2 import Allocation, expected_makespan
@@ -65,6 +84,8 @@ from repro.runtime.elastic import FailureDetector
 
 __all__ = ["ClusterConfig", "CodedExecutionEngine", "RoundOutput",
            "RoundHandle"]
+
+logger = logging.getLogger("repro.cluster")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,6 +102,7 @@ class ClusterConfig:
     detector_dead_after: int = 3   # consecutive struck rounds ⇒ dead
     generator_kind: str = "systematic_cauchy"
     decode_with_kernel: bool = False   # opt-in: Pallas mds_decode (float32)
+    enable_stealing: bool = True       # idle-triggered chunk steal pass
 
 
 @dataclasses.dataclass
@@ -126,6 +148,12 @@ class _RoundState:
         self.partials: Dict[Tuple[int, int], np.ndarray] = {}
         self.need = k * chunks          # Σ max(0, k - |used[c]|)
         self.assigned: List[Set[int]] = [set() for _ in range(n)]
+        self.pending: Set[int] = set(range(chunks))   # chunks with |used|<k
+        # chunks dispatched to w whose events have not yet been seen and
+        # that were not retracted — the deadline clock and the steal pass
+        # both key off this (retraction removes entries atomically, so a
+        # stolen chunk never earns the donor deadline credit)
+        self.outstanding: List[Set[int]] = [set() for _ in range(n)]
         self.chunks_done = np.zeros(n, dtype=np.int64)
         self.wasted_chunks = np.zeros(n, dtype=np.int64)
         self.finish_t = np.full(n, np.inf)      # WorkerDone wall time
@@ -135,6 +163,10 @@ class _RoundState:
         self.first_start_t = np.full(n, np.nan)  # first task began serving
         self.tasks: Dict[int, ChunkTask] = {}   # latest task per worker
         self.cancelled: Set[int] = set()
+        self.steals = 0                 # successful steal passes
+        self.retracted = 0              # chunks retracted (== re-dispatched)
+        self.failures: List[str] = []   # WorkerFailed reasons seen
+        self.last_sweep = 0.0           # rate limiter for _steal_sweep
 
 
 class _Shutdown:
@@ -164,6 +196,7 @@ class CodedExecutionEngine:
                                         slack=cfg.detector_slack,
                                         dead_after=cfg.detector_dead_after)
         self.dead: Set[int] = set()
+        self.failed: Dict[int, str] = {}    # worker -> crash reason (logged)
         self.iteration = 0              # drives the injectors
         self._round_seq = 0
         self._tenant_seq = 0
@@ -203,6 +236,22 @@ class CodedExecutionEngine:
             if worker is not None:
                 self._worker_last_event[worker] = getattr(
                     ev, "t", time.perf_counter())
+            if isinstance(ev, WorkerFailed):
+                # a crash (unlike fail-stop silence) is observable: log the
+                # real reason, declare the worker dead engine-wide, and
+                # broadcast to EVERY live round — each had (or may queue)
+                # work on this worker and must fail over, not wait out the
+                # §4.4 silence detector
+                logger.warning("worker %d failed (round %d): %s",
+                               ev.worker, ev.round_id, ev.error)
+                with self._obs_lock:
+                    self.dead.add(ev.worker)
+                    self.failed[ev.worker] = ev.error
+                with self._rounds_lock:
+                    targets = list(self._rounds.items())
+                for rid, inbox in targets:
+                    inbox.put(dataclasses.replace(ev, round_id=rid))
+                continue
             with self._rounds_lock:
                 inbox = self._rounds.get(getattr(ev, "round_id", None))
             if inbox is not None:
@@ -412,6 +461,8 @@ class CodedExecutionEngine:
         if not chunk_ids:
             return
         state.assigned[worker].update(chunk_ids)
+        state.outstanding[worker].update(chunk_ids)
+        state.cancelled.discard(worker)     # re-tasked: await it again
         task = ChunkTask(
             round_id=rid, iteration=iteration, shard_id=data.shard_id,
             chunks=[(c, *data.chunk_range(c)) for c in chunk_ids],
@@ -461,7 +512,11 @@ class CodedExecutionEngine:
             backlog = max(1, self.inflight_rounds())
             dls = [floor_deadline]
             for w in state.tasks:
-                if np.isfinite(state.finish_t[w]) or w in state.cancelled:
+                # a worker with no outstanding chunks owes nothing — its
+                # work completed, was retracted away, or it was cancelled /
+                # declared failed.  Retracted chunks therefore never earn
+                # their (former) owner deadline credit.
+                if w in state.cancelled or not state.outstanding[w]:
                     continue
                 if np.isfinite(state.start_t[w]):
                     dls.append(state.start_t[w] + window * factor)
@@ -522,12 +577,45 @@ class CodedExecutionEngine:
                 continue
 
             last_arrival = time.perf_counter()
+            if isinstance(ev, WorkerFailed):
+                if ev.round_id != rid:
+                    continue
+                w = ev.worker
+                state.last_event_t[w] = ev.t
+                state.failures.append(f"worker {w}: {ev.error}")
+                state.cancelled.add(w)      # stop awaiting it on deadlines
+                lost = sorted(c for c in state.outstanding[w]
+                              if len(state.used[c]) < k)
+                state.outstanding[w].clear()
+                # fail over NOW: the crashed worker's uncovered obligation
+                # moves to live workers without waiting for a §4.3 timeout
+                if lost:
+                    self._failover_dispatch(state, rid, iteration, data, x,
+                                            w, lost)
+                continue
             if isinstance(ev, WorkerDone):
-                if ev.round_id != rid or ev.cancelled:
-                    continue        # cancel-acks don't count as finishes
-                state.finish_t[ev.worker] = ev.t
+                if ev.round_id != rid:
+                    continue
+                if ev.cancelled:
+                    # ack (cancel / eviction / fully-retracted task): the
+                    # now-idle worker may be refilled by a steal.  Its
+                    # outstanding ledger is NOT cleared here — the ack does
+                    # not say which task it closes, and a stale drained-ack
+                    # racing a fresh re-dispatch must not wipe the fresh
+                    # chunks' deadline tracking.  The master clears the
+                    # ledger itself at each point it abandons work
+                    # (retraction, wave cancel, failure).
+                    self._steal_pass(state, rid, iteration, data, x,
+                                     ev.worker)
+                    continue
+                # a stale done (new work dispatched since) must not mark
+                # the worker finished — nor re-anchor the §4.3 deadline
+                # clock to the OLD task's start — while fresh chunks are
+                # pending (the fresh task's own events will stamp start_t)
+                if not state.outstanding[ev.worker]:
+                    state.finish_t[ev.worker] = ev.t
+                    state.start_t[ev.worker] = ev.t_start
                 state.last_event_t[ev.worker] = ev.t
-                state.start_t[ev.worker] = ev.t_start
                 if not np.isfinite(state.first_start_t[ev.worker]):
                     state.first_start_t[ev.worker] = ev.t_start
                 if use_timeout and not window_frozen:
@@ -541,6 +629,9 @@ class CodedExecutionEngine:
                         durations = np.sort(service)[:k]
                         window = max(float(durations.mean()), planned)
                         window_frozen = True
+                # the finisher is idle (or about to be): steal queued
+                # coverage from the most backlogged workers into it
+                self._steal_pass(state, rid, iteration, data, x, ev.worker)
                 continue
             if not isinstance(ev, ChunkDone) or ev.round_id != rid:
                 continue
@@ -550,13 +641,20 @@ class CodedExecutionEngine:
             if not np.isfinite(state.first_start_t[w]):
                 state.first_start_t[w] = ev.t_start
             state.chunks_done[w] += 1
+            state.outstanding[w].discard(c)
             if len(state.used[c]) < k and w not in state.covered_by[c]:
                 state.covered_by[c].add(w)
                 state.used[c].append(w)
                 state.partials[(w, c)] = ev.result
                 state.need -= 1
+                if len(state.used[c]) >= k:
+                    state.pending.discard(c)    # fully covered
             else:
                 state.wasted_chunks[w] += 1
+            # chunk-granular idle scan: a worker idled by ANOTHER round's
+            # completion sends this round no event, so piggyback a cheap
+            # sweep on our own chunk stream
+            self._steal_sweep(state, rid, iteration, data, x)
 
         t_collected = time.perf_counter()
         # cancel everything still running — the round is decodable
@@ -567,14 +665,11 @@ class CodedExecutionEngine:
 
         # decode from exactly-k coverage: gather the used results compactly
         # (no dense (n, C, rpc) scratch) and run one batched contraction
-        # into a preallocated block-major buffer (CodedData.decode_compact)
-        ids = np.empty((C, k), dtype=np.int64)
-        y_parts = np.empty((C, k, rpc), dtype=np.float64)
-        for c in range(C):
-            row = sorted(state.used[c])
-            ids[c] = row
-            for j, w in enumerate(row):
-                y_parts[c, j] = state.partials[(w, c)]
+        # into a preallocated block-major buffer (CodedData.decode_compact).
+        # gather_used sorts each chunk's responders, so the decode depends
+        # only on the coverage SET — stealing-on and stealing-off decode
+        # bit-identically whenever coverage matches.
+        ids, y_parts = data.gather_used(state.used, state.partials)
         dms = data.code.decode_submats(ids)
         y = data.decode_compact(dms, y_parts,
                                 use_kernel=cfg.decode_with_kernel)
@@ -587,8 +682,10 @@ class CodedExecutionEngine:
         speeds = np.full(n, np.nan)
         response = np.full(n, np.nan)
         for w in range(n):
-            if w not in active:
-                continue            # zero allocation: no measurement
+            if w not in active or not state.assigned[w]:
+                # zero allocation — or every chunk stolen away before it
+                # began (an empty assignment proves nothing about speed)
+                continue
             # clock from when the worker actually began serving (== t0 at
             # inflight=1): queue wait behind other rounds must not read as
             # slowness or the predictor unlearns every busy worker
@@ -635,7 +732,9 @@ class CodedExecutionEngine:
             planned_makespan=planned, reassign_waves=waves,
             mispredicted=mispredicted,
             cancelled_workers=len(state.cancelled),
-            inflight=inflight)
+            inflight=inflight,
+            steals=state.steals, retracted_chunks=state.retracted,
+            worker_failures=tuple(state.failures))
         return RoundOutput(y=y, metrics=metrics)
 
     def _reassign_wave(self, state: _RoundState, rid: int, iteration: int,
@@ -651,7 +750,8 @@ class CodedExecutionEngine:
         n, k, C = data.n, data.k, data.chunks
         pending = [c for c in range(C) if len(state.used[c]) < k]
         finished = [w for w in range(n)
-                    if np.isfinite(state.finish_t[w]) and w not in self.dead]
+                    if np.isfinite(state.finish_t[w]) and w not in self.dead
+                    and not self.workers[w].dead]
         # fastest measured first
         rate = state.chunks_done / np.maximum(
             np.where(np.isfinite(state.finish_t),
@@ -678,16 +778,148 @@ class CodedExecutionEngine:
                 if not still_needed:
                     state.tasks[w].cancel.set()
                     state.cancelled.add(w)
+                    # master-initiated abandonment clears the ledger HERE
+                    # (never from the ack, which could race a re-dispatch)
+                    state.outstanding[w].clear()
         max_extra = 0
         for w, ids in extra.items():
             if ids:
                 self._dispatch(state, rid, iteration, data, x, w, ids)
+                # recovery work is deadline-critical: jump the cross-round
+                # FIFO instead of queueing behind other tenants
+                self.workers[w].promote_round(rid)
                 max_extra = max(max_extra, len(ids))
         planned_extra = max_extra * data.rows_per_chunk * self.cfg.row_cost
         if short:
             planned_extra = max(planned_extra,
                                 C * data.rows_per_chunk * self.cfg.row_cost)
         return planned_extra
+
+    # ------------------------------------------------------------------
+    # chunk-granular work stealing
+    # ------------------------------------------------------------------
+
+    def _steal_pass(self, state: _RoundState, rid: int, iteration: int,
+                    data: CodedData, x: np.ndarray, wi: int) -> int:
+        """Refill idle worker ``wi`` with coverage stolen from backlogs.
+
+        Retracts queued (provably not-yet-started) chunks of THIS round
+        from the most backlogged donor and re-dispatches the same chunk
+        indices to ``wi``, which computes them from its **own** coded
+        shard — stealing moves the coverage obligation, not rows, so no
+        data ever travels (the S²C² placement constraint).  Returns the
+        number of chunks stolen.  Composition with §4.3 is by accounting:
+        a retracted chunk leaves the donor's ``assigned``/``outstanding``
+        sets in the same breath, so it can neither double-count coverage
+        (the any-k guard still sees one completion per worker per chunk)
+        nor hold the donor's deadline open.
+        """
+        cfg = self.cfg
+        if not cfg.enable_stealing or state.need <= 0:
+            return 0
+        # workers[wi].dead catches a silent fail-stop the §4.4 detector has
+        # not yet confirmed — a fail-stopped worker consumes dispatched
+        # items without ever emitting events, so stealing into it would
+        # move chunks from a live donor into a black hole
+        if wi in self.dead or self.workers[wi].dead:
+            return 0
+        if state.outstanding[wi] or not self.workers[wi].idle():
+            return 0
+        # state.pending is maintained incrementally (chunks still short of
+        # k coverage), so this scan shrinks with the round instead of
+        # re-walking all C chunks on every event
+        eligible = {c for c in state.pending
+                    if wi not in state.covered_by[c]
+                    and c not in state.assigned[wi]}
+        if not eligible:
+            return 0
+        donors = [w for w in range(data.n)
+                  if w != wi and state.outstanding[w] & eligible]
+        # most backlogged first — TOTAL queue length (all rounds), because
+        # that is what actually delays the donor's queued chunks
+        donors.sort(key=lambda w: -self.workers[w].backlog())
+        for wb in donors:
+            queued = self.workers[wb].backlog(rid)
+            if queued <= 0:
+                continue        # everything already executing / completed
+            want = sorted(state.outstanding[wb] & eligible)
+            # take at most half the donor's queue (rounded up to one): the
+            # donor keeps the work it can start soonest, wi fills from the
+            # tail that would otherwise run last
+            taken = self.workers[wb].retract(rid, want,
+                                             limit=max(1, queued // 2))
+            if not taken:
+                continue        # raced: the executor got there first
+            for c in taken:
+                state.assigned[wb].discard(c)
+                state.outstanding[wb].discard(c)
+            state.retracted += len(taken)
+            state.steals += 1
+            self._dispatch(state, rid, iteration, data, x, wi, taken)
+            return len(taken)
+        return 0
+
+    def _steal_sweep(self, state: _RoundState, rid: int, iteration: int,
+                     data: CodedData, x: np.ndarray) -> None:
+        """Offer stolen work to every currently idle worker.
+
+        Runs on the round driver's chunk stream; cost is one lock-guarded
+        ``idle()`` probe per worker, and the per-idle-worker eligibility
+        scan is bounded by the shrinking ``state.pending`` set.
+        """
+        if not self.cfg.enable_stealing or state.need <= 0 \
+                or not state.pending:
+            return
+        # rate-limit the piggybacked sweep: the per-worker idle() probes
+        # contend with the executors' own queue locks, and an idle worker
+        # is also refilled immediately by its own WorkerDone trigger — the
+        # sweep only exists to catch workers idled by OTHER rounds
+        now = time.perf_counter()
+        if now - state.last_sweep < 2e-3:
+            return
+        state.last_sweep = now
+        for wi in range(data.n):
+            if self.workers[wi].idle():
+                self._steal_pass(state, rid, iteration, data, x, wi)
+
+    def _failover_dispatch(self, state: _RoundState, rid: int,
+                           iteration: int, data: CodedData, x: np.ndarray,
+                           failed_w: int, chunk_ids: List[int]) -> None:
+        """Re-dispatch a crashed worker's uncovered chunks immediately.
+
+        Targets are workers with nothing outstanding for this round (so the
+        one-active-task-per-round invariant holds), alive, and not already
+        computing/covering the chunk; least backlogged first.  Chunks with
+        no legal target are left for §4.3 waves / steal passes.
+        """
+        per_target: Dict[int, List[int]] = {}
+        for c in chunk_ids:
+            cands = [w for w in range(data.n)
+                     if w != failed_w and w not in self.dead
+                     and not self.workers[w].dead
+                     and not state.outstanding[w]
+                     and c not in state.assigned[w]
+                     and w not in state.covered_by[c]]
+            if not cands:
+                continue
+            w = min(cands, key=lambda w_: (self.workers[w_].backlog()
+                                           + len(per_target.get(w_, []))))
+            per_target.setdefault(w, []).append(c)
+        for w, ids in per_target.items():
+            self._dispatch(state, rid, iteration, data, x, w, ids)
+            self.workers[w].promote_round(rid)
+
+    def worker_stats(self) -> Dict[str, np.ndarray]:
+        """Per-worker busy/idle/retraction counters (pool instrumentation)."""
+        now = time.perf_counter()
+        return {
+            "busy_s": np.array([w.busy_s for w in self.workers]),
+            # idle_seconds includes each worker's in-progress wait, so the
+            # tail idle after a worker's last task is counted too
+            "idle_s": np.array([w.idle_seconds(now) for w in self.workers]),
+            "retracted_chunks": np.array([w.retracted_total
+                                          for w in self.workers]),
+        }
 
     # ------------------------------------------------------------------
     # uncoded replication path (speculative re-execution)
@@ -728,7 +960,6 @@ class CodedExecutionEngine:
         n_done = 0
         deadline = t0 + n_parts * rpp * cfg.row_cost * 20    # liveness bound
         speculated = False
-        extensions = 0
         last_arrival = t0
         while n_done < n_parts:
             now = time.perf_counter()
@@ -747,11 +978,15 @@ class CodedExecutionEngine:
                     continue            # clamped probe, deadline not reached
                 # a primary died with no idle replica holder: force-launch
                 # every pending partition on ANY idle alive worker holding a
-                # replica.  Keep waiting while an already-launched attempt is
-                # still in flight on a worker not known dead (it may just be
-                # very slow); give up only once nothing is launchable and
-                # nothing credible is in flight (bounded by the extension
-                # cap, so a silently-crashed attempt cannot wait forever).
+                # replica.  Keep waiting while an already-launched attempt
+                # is still in flight on a worker not known dead — the
+                # deadline here is VIRTUAL time, and a loaded host can
+                # stretch real service far past it, so in-flight attempts
+                # are only abandoned on REAL silence: if the round has seen
+                # no event at all for starvation_timeout, the attempts are
+                # presumed fail-stopped.  (An extension-count cap here used
+                # to mis-declare busy-but-alive attempts unrecoverable
+                # whenever the host was contended.)
                 progressed = False
                 in_flight = False
                 for p in range(n_parts):
@@ -767,17 +1002,38 @@ class CodedExecutionEngine:
                     elif any(w in busy and w not in self.dead
                              for w in attempt_owner[p]):
                         in_flight = True
-                extensions += 1
-                if not progressed and (
-                        not in_flight
-                        or extensions > cfg.max_reassign_waves + 1):
+                if not progressed and not in_flight:
                     raise RuntimeError(
                         f"replicated round {rid}: {n_parts - n_done} "
                         "partitions unrecoverable (all replicas dead?)")
+                if not progressed and \
+                        now - last_arrival >= cfg.starvation_timeout:
+                    raise RuntimeError(
+                        f"replicated round {rid}: {n_parts - n_done} "
+                        "partitions stuck — in-flight attempts silent for "
+                        f"{cfg.starvation_timeout}s (fail-stopped replicas?)")
                 deadline = time.perf_counter() + n_parts * rpp * cfg.row_cost * 20
                 continue
 
             last_arrival = time.perf_counter()
+            if isinstance(ev, WorkerFailed):
+                if ev.round_id != rid:
+                    continue
+                # crashed worker: relaunch its pending partitions on idle
+                # alive replica holders right away (no waiting for the
+                # liveness probe; the collector already marked it dead)
+                busy.discard(ev.worker)
+                for p in range(n_parts):
+                    if results[p] is not None or \
+                            ev.worker not in attempt_owner[p]:
+                        continue
+                    holders = [int(h) for h in data.placement[p]
+                               if int(h) not in busy
+                               and int(h) not in self.dead
+                               and int(h) not in attempt_owner[p]]
+                    if holders:
+                        launch(p, holders[0])
+                continue
             if isinstance(ev, WorkerDone):
                 if ev.round_id == rid:
                     busy.discard(ev.worker)     # idle again either way

@@ -40,6 +40,9 @@ class RoundMetrics:
     mispredicted: bool = False
     cancelled_workers: int = 0
     inflight: int = 1                 # rounds in flight when this one started
+    steals: int = 0                   # successful idle-triggered steal passes
+    retracted_chunks: int = 0         # chunks retracted and re-dispatched
+    worker_failures: tuple = ()       # WorkerFailed reasons seen this round
 
     @property
     def total_useful(self) -> float:
@@ -88,6 +91,14 @@ class JobMetrics:
     def wasted_rows(self) -> float:
         return sum(r.total_wasted for r in self.rounds)
 
+    @property
+    def steals(self) -> int:
+        return sum(r.steals for r in self.rounds)
+
+    @property
+    def retracted_chunks(self) -> int:
+        return sum(r.retracted_chunks for r in self.rounds)
+
 
 @dataclasses.dataclass
 class ServiceReport:
@@ -106,6 +117,8 @@ class ServiceReport:
     by_strategy: Dict[str, Dict[str, float]]
     max_inflight: int = 1             # scheduler slots of the service
     peak_inflight: int = 1            # max jobs observed in service at once
+    total_steals: int = 0             # idle-triggered steal passes, all rounds
+    total_retracted: int = 0          # chunks retracted and re-dispatched
 
     @classmethod
     def from_jobs(cls, jobs: List[JobMetrics], wall_time: float,
@@ -142,7 +155,9 @@ class ServiceReport:
             wasted_fraction=wasted / (useful + wasted)
             if (useful + wasted) > 0 else 0.0,
             by_strategy=by, max_inflight=max_inflight,
-            peak_inflight=peak_inflight)
+            peak_inflight=peak_inflight,
+            total_steals=sum(j.steals for j in jobs),
+            total_retracted=sum(j.retracted_chunks for j in jobs))
 
     def format(self) -> str:
         lines = [
@@ -155,7 +170,9 @@ class ServiceReport:
             f"p99={self.p99_latency * 1e3:.1f}ms  "
             f"queue_wait p50={self.p50_queue_wait * 1e3:.1f}ms "
             f"p99={self.p99_queue_wait * 1e3:.1f}ms  "
-            f"wasted={self.wasted_fraction * 100:.1f}%",
+            f"wasted={self.wasted_fraction * 100:.1f}%  "
+            f"steals={self.total_steals} "
+            f"(retracted_chunks={self.total_retracted})",
         ]
         for strat, s in self.by_strategy.items():
             lines.append(

@@ -173,6 +173,7 @@ class JobService:
         self._in_service = 0
         self._peak_inflight = 0        # max jobs observed in service at once
         self._t_open = time.perf_counter()
+        self._t_first_submit: Optional[float] = None   # throughput window
         self._threads = [
             threading.Thread(target=self._run, name=f"job-slot-{i}",
                              daemon=True)
@@ -201,6 +202,9 @@ class JobService:
                 self._accepted -= 1
             raise ServiceSaturated(
                 f"job queue full ({self.queue.maxsize}); retry later")
+        with self._lock:
+            if self._t_first_submit is None:
+                self._t_first_submit = metrics.t_submit
         return handle
 
     def drain(self, timeout: Optional[float] = None) -> None:
@@ -261,10 +265,27 @@ class JobService:
             return self._peak_inflight
 
     def report(self) -> ServiceReport:
+        """Aggregate report over completed jobs.
+
+        Throughput is measured over the first-submit → last-completion
+        window, not the service's whole open time: a service that sat idle
+        before its first job must not have that idleness counted against
+        ``jobs_per_s``.  While jobs are still pending the window's right
+        edge is "now" (work is ongoing); with no submissions yet it falls
+        back to the open-time window.
+        """
+        now = time.perf_counter()
         with self._lock:
             jobs = list(self.completed)
             peak = self._peak_inflight
-        wall = time.perf_counter() - self._t_open
+            pending = self._accepted - len(jobs)
+            t_first = self._t_first_submit
+        if t_first is None:
+            wall = now - self._t_open
+        else:
+            end = now if pending > 0 else \
+                max((j.t_done for j in jobs), default=now)
+            wall = max(end - t_first, 1e-9)
         return ServiceReport.from_jobs(jobs, wall,
                                        max_inflight=self.max_inflight,
                                        peak_inflight=peak)

@@ -1,18 +1,36 @@
 """Worker thread: holds coded shards, really computes assigned chunks.
 
 A worker owns a shard store (``shard_id -> np.ndarray`` of coded rows, one
-entry per tenant job), an inbox of :class:`ChunkTask` commands, and pushes
-:class:`ChunkDone` / :class:`WorkerDone` events to the master's single
-event queue.  Chunks are computed *in assignment order, one at a time* —
+entry per tenant job), a **retractable deque** of per-chunk work items, and
+pushes :class:`ChunkDone` / :class:`WorkerDone` events to the master's
+single event queue.  Chunks are computed *one at a time, in queue order* —
 that is what makes partial work and out-of-order any-k collection real:
 the master sees chunk-granular completions interleaved across workers and
-can stop, cancel, or reassign between any two of them.
+can stop, cancel, reassign, **retract**, or **reprioritize** between any
+two of them.
+
+The inbox is chunk-granular on purpose (the work-stealing substrate): a
+dispatched :class:`ChunkTask` is split into one queue item per chunk, and
+the master may
+
+* :meth:`Worker.retract` not-yet-started chunks (each retracted chunk is
+  provably never computed — retraction is atomic against the run loop, so
+  a chunk is either still queued here and silently removed, or already
+  taken by the executor and guaranteed to produce a :class:`ChunkDone`);
+* :meth:`Worker.promote_round` a latency-critical round's queued chunks to
+  the front of the deque (stable within the round);
+* observe :meth:`Worker.backlog` / :meth:`Worker.idle` to drive the
+  idle-triggered steal pass.
 
 Speed injection: before each chunk the worker asks its injector for the
 current speed ``s`` and stretches the chunk to ``rows · row_cost / s``
 seconds of wall time (compute runs natively; the remainder is slept, so the
 throttling is real wall-clock, not bookkeeping).  ``s == 0`` ⇒ fail-stop:
-the worker drops the task silently and ignores all future work.
+the worker drops all work silently and ignores everything from then on.
+A backend *exception* is the opposite of fail-stop silence: the worker
+emits a terminal :class:`WorkerFailed` event carrying the real error before
+going dead, so the master can log a reason and fail over immediately
+instead of waiting out the §4.4 silence detector.
 
 The compute backend is pluggable: the default is the BLAS matvec
 (``a[rows] @ x``); :class:`KernelBackend` (via :func:`kernel_backend`)
@@ -29,15 +47,15 @@ chunk.
 from __future__ import annotations
 
 import dataclasses
-import queue
 import threading
 import time
-from collections import OrderedDict
-from typing import Callable, Dict, List, Optional, Tuple
+from collections import OrderedDict, deque
+from typing import (Callable, Deque, Dict, List, Optional, Sequence, Set,
+                    Tuple)
 
 import numpy as np
 
-__all__ = ["ChunkTask", "ChunkDone", "WorkerDone", "Worker",
+__all__ = ["ChunkTask", "ChunkDone", "WorkerDone", "WorkerFailed", "Worker",
            "numpy_backend", "kernel_backend", "KernelBackend"]
 
 ComputeFn = Callable[[np.ndarray, np.ndarray], np.ndarray]
@@ -81,9 +99,11 @@ class ChunkDone:
 class WorkerDone:
     """Worker finished its task — or acked a master-initiated cancel.
 
-    ``cancelled=True`` means the task ended early on the master's own
-    cancel signal (an ack, not a completion); a fail-stopped worker emits
-    nothing at all — silence is the failure signal.
+    ``cancelled=True`` means the task ended early without completing its
+    assignment: a master cancel, a tenant eviction mid-task, or a
+    retraction that emptied the task's queue (an ack, not a completion —
+    retraction must never earn §4.3 deadline credit).  A fail-stopped
+    worker emits nothing at all — silence is the failure signal.
     """
 
     worker: int
@@ -92,6 +112,23 @@ class WorkerDone:
     chunks_done: int
     cancelled: bool = False
     t_start: float = 0.0           # see ChunkDone.t_start
+
+
+@dataclasses.dataclass
+class WorkerFailed:
+    """Terminal event: the worker's backend raised and the worker is dead.
+
+    Unlike fail-stop (pure silence, detected only by the §4.4 strike
+    counter), a crash is *observable* — this event carries the real error
+    so the master can log a reason and immediately fail the worker over
+    instead of waiting for the silence detector.
+    """
+
+    worker: int
+    round_id: int
+    t: float
+    error: str
+    t_start: float = 0.0
 
 
 def numpy_backend(a_rows: np.ndarray, x: np.ndarray) -> np.ndarray:
@@ -116,21 +153,23 @@ class KernelBackend:
     * each (worker_id, shard_id) shard is converted/uploaded ONCE and kept
       device-resident (float32, the kernel's compute dtype) until the
       tenant is unloaded (``drop_shard``);
-    * the per-chunk operand x is cached by identity — one task reuses the
-      same vector for all of its chunks;
+    * the per-chunk operand x is cached in a small content-keyed LRU (see
+      ``_device_x``) so pipelined tenants alternating x vectors all stay
+      cached at once;
     * chunk row counts are bucketed to the next power of two (floor 8), so
       heterogeneous tenants land on a handful of kernel shapes instead of
       retracing the jit for every distinct ``rows_per_chunk``.
 
     One instance is shared by all workers of ONE engine (shard ids are
     engine-scoped — do not share a backend between engines); cache
-    mutation is lock-guarded, compute itself runs lock-free.  The cache is
-    LRU-capped so a rare drop/compute race (a straggler mid-task while its
-    tenant unloads re-caching an already-dropped shard) stays a bounded
+    mutation is lock-guarded, compute itself runs lock-free.  Both caches
+    are LRU-capped so a rare drop/compute race (a straggler mid-task while
+    its tenant unloads re-caching an already-dropped shard) stays a bounded
     cache entry, never an unbounded leak.
     """
 
     _SHARD_CACHE_CAP = 128
+    _X_CACHE_CAP = 16
 
     def __init__(self, interpret: Optional[bool] = None,
                  row_bucket_floor: int = 8):
@@ -142,7 +181,15 @@ class KernelBackend:
         self.row_bucket_floor = row_bucket_floor
         self._lock = threading.Lock()
         self._shards: "OrderedDict[Tuple[int, str], object]" = OrderedDict()
-        self._x_cache: Tuple[Optional[np.ndarray], object] = (None, None)
+        # content-keyed x LRU: one slot per distinct operand vector, so
+        # concurrent rounds alternating x vectors (pipelined tenants) each
+        # keep their device copy instead of evicting one another on every
+        # chunk.  Keying by the bytes also makes the old stale-pair race
+        # impossible: a (snapshot, device) pair was written in two steps
+        # under interleaved writers; here key and value land atomically.
+        self._x_cache: "OrderedDict[Tuple, object]" = OrderedDict()
+        self._x_hits = 0
+        self._x_misses = 0
 
     # -- shard-aware protocol ----------------------------------------------
     def _device_shard(self, worker_id: int, shard_id: str,
@@ -161,17 +208,22 @@ class KernelBackend:
         return dev
 
     def _device_x(self, x: np.ndarray):
-        # content-checked against a snapshot, not just identity: callers
-        # legitimately mutate x in place between rounds (e.g. gradient
-        # descent's `w -= ...`) while reusing the same array object
+        # content-keyed, not identity-keyed: callers legitimately mutate x
+        # in place between rounds (e.g. gradient descent's `w -= ...`)
+        # while reusing the same array object — new contents, new key
+        key = (x.shape, x.dtype.str, x.tobytes())
         with self._lock:
-            cached_np, cached_dev = self._x_cache
-        if (cached_np is not None and cached_np.shape == x.shape
-                and np.array_equal(cached_np, x)):
-            return cached_dev
+            dev = self._x_cache.get(key)
+            if dev is not None:
+                self._x_cache.move_to_end(key)
+                self._x_hits += 1
+                return dev
+            self._x_misses += 1
         dev = self._jnp.asarray(x, self._jnp.float32)
         with self._lock:
-            self._x_cache = (x.copy(), dev)
+            self._x_cache[key] = dev
+            while len(self._x_cache) > self._X_CACHE_CAP:
+                self._x_cache.popitem(last=False)
         return dev
 
     def compute_chunk(self, worker_id: int, shard_id: str, shard: np.ndarray,
@@ -194,7 +246,10 @@ class KernelBackend:
 
     def cache_info(self) -> dict:
         with self._lock:
-            return {"shards": len(self._shards)}
+            return {"shards": len(self._shards),
+                    "x_entries": len(self._x_cache),
+                    "x_hits": self._x_hits,
+                    "x_misses": self._x_misses}
 
     # -- plain ComputeFn fallback ------------------------------------------
     def __call__(self, a_rows: np.ndarray, x: np.ndarray) -> np.ndarray:
@@ -211,10 +266,35 @@ def kernel_backend(interpret: Optional[bool] = None) -> KernelBackend:
     return KernelBackend(interpret=interpret)
 
 
-class Worker(threading.Thread):
-    """One cluster node: shard store + sequential chunk executor."""
+class _TaskProgress:
+    """Shared bookkeeping of one ChunkTask across its queued chunk items.
 
-    def __init__(self, worker_id: int, event_queue: "queue.Queue",
+    ``remaining`` counts queued + currently-executing chunks; it reaches
+    zero exactly once (completion, cancellation purge, or retraction of the
+    last queued chunk), which is what guarantees exactly one terminal
+    WorkerDone per task.  All mutation happens under the worker's
+    condition lock.
+    """
+
+    __slots__ = ("task", "remaining", "done", "running", "started", "t_start")
+
+    def __init__(self, task: ChunkTask, n_chunks: int):
+        self.task = task
+        self.remaining = n_chunks
+        self.done = 0
+        self.running = False
+        self.started = False
+        self.t_start = 0.0
+
+
+# queue item: (progress, chunk_id, row_start, row_stop)
+_Item = Tuple[_TaskProgress, int, int, int]
+
+
+class Worker(threading.Thread):
+    """One cluster node: shard store + retractable sequential chunk executor."""
+
+    def __init__(self, worker_id: int, event_queue,
                  injector, compute: ComputeFn = numpy_backend):
         super().__init__(name=f"worker-{worker_id}", daemon=True)
         self.worker_id = worker_id
@@ -225,11 +305,17 @@ class Worker(threading.Thread):
         # keep a device-resident copy (see KernelBackend)
         self._compute_chunk = getattr(compute, "compute_chunk", None)
         self._compute_drop = getattr(compute, "drop_shard", None)
-        self.inbox: "queue.Queue[Optional[ChunkTask]]" = queue.Queue()
+        self._cv = threading.Condition()
+        self._items: Deque[_Item] = deque()
+        self._active: Optional[_TaskProgress] = None
+        self._idle_since: Optional[float] = None    # in-progress idle wait
+        self._stopped = False
         self.shards: Dict[str, np.ndarray] = {}
         self._shard_lock = threading.Lock()
         self.dead = False
         self.busy_s = 0.0           # wall seconds spent computing chunks
+        self.idle_s = 0.0           # wall seconds spent waiting for work
+        self.retracted_total = 0    # lifetime chunks retracted by the master
 
     # -- shard management (called from the master thread) -------------------
     def install_shard(self, shard_id: str, rows: np.ndarray) -> None:
@@ -244,60 +330,200 @@ class Worker(threading.Thread):
 
     # -- dispatch ----------------------------------------------------------
     def submit(self, task: ChunkTask) -> None:
-        self.inbox.put(task)
+        """Enqueue one chunk item per task chunk (FIFO behind queued work)."""
+        tp = _TaskProgress(task, len(task.chunks))
+        with self._cv:
+            for chunk_id, r0, r1 in task.chunks:
+                self._items.append((tp, chunk_id, r0, r1))
+            self._cv.notify()
 
     def stop(self) -> None:
-        self.inbox.put(None)
+        """Drain remaining queued work, then exit the thread."""
+        with self._cv:
+            self._stopped = True
+            self._cv.notify_all()
+
+    # -- master-side queue surgery (the work-stealing substrate) -----------
+    def backlog(self, round_id: Optional[int] = None) -> int:
+        """Queued (not yet started) chunk count, optionally for one round."""
+        with self._cv:
+            if round_id is None:
+                return len(self._items)
+            return sum(1 for it in self._items
+                       if it[0].task.round_id == round_id)
+
+    def idle(self) -> bool:
+        """True iff nothing is queued and nothing is executing."""
+        with self._cv:
+            return not self._items and self._active is None
+
+    def retract(self, round_id: int, chunk_ids: Sequence[int],
+                limit: Optional[int] = None) -> List[int]:
+        """Remove up to ``limit`` not-yet-started chunks of ``round_id``.
+
+        Returns the chunk ids actually retracted.  Atomic against the run
+        loop: a returned chunk was still queued and will NEVER produce an
+        event; a chunk not returned either never existed here or was
+        already taken by the executor (it WILL produce its ChunkDone) —
+        there is no third state, which is what makes stolen coverage
+        impossible to double-count.  Retraction prefers the *back* of the
+        queue (the chunks that would have run last), leaving the donor's
+        imminent work untouched.  A task whose queue empties entirely
+        through retraction emits one cancelled-style WorkerDone ack so the
+        master sees the worker go idle without awarding deadline credit.
+        """
+        want: Set[int] = set(chunk_ids)
+        cap = len(want) if limit is None else max(int(limit), 0)
+        taken: List[int] = []
+        drained: List[_TaskProgress] = []
+        with self._cv:
+            kept: List[_Item] = []
+            for item in reversed(self._items):      # steal from the tail
+                tp, cid, _r0, _r1 = item
+                if (len(taken) < cap and cid in want
+                        and tp.task.round_id == round_id
+                        and not tp.task.cancel.is_set()):
+                    want.discard(cid)               # each id at most once
+                    taken.append(cid)
+                    tp.remaining -= 1
+                    if tp.remaining == 0 and not tp.running:
+                        drained.append(tp)
+                else:
+                    kept.append(item)
+            if taken:
+                kept.reverse()
+                self._items = deque(kept)
+                self.retracted_total += len(taken)
+        now = time.perf_counter()
+        for tp in drained:
+            self.events.put(WorkerDone(self.worker_id, tp.task.round_id,
+                                       now, tp.done, cancelled=True,
+                                       t_start=tp.t_start or now))
+        return taken
+
+    def promote_round(self, round_id: int) -> int:
+        """Move queued chunks of ``round_id`` to the queue front (stable).
+
+        Used by the master to let a §4.3 recovery dispatch jump the
+        cross-round FIFO instead of queueing behind other tenants' work.
+        Returns the number of promoted items.
+        """
+        with self._cv:
+            front = [it for it in self._items
+                     if it[0].task.round_id == round_id]
+            if not front:
+                return 0
+            back = [it for it in self._items
+                    if it[0].task.round_id != round_id]
+            self._items = deque(front + back)
+            return len(front)
 
     # -- main loop ---------------------------------------------------------
+    def idle_seconds(self, now: Optional[float] = None) -> float:
+        """Settled idle time plus the currently in-progress wait (if any).
+
+        The in-progress term matters: a worker that finished its last task
+        blocks in the run loop until shutdown, and that tail idleness must
+        be visible to pool instrumentation read mid-run.
+        """
+        if now is None:
+            now = time.perf_counter()
+        with self._cv:
+            extra = (now - self._idle_since
+                     if self._idle_since is not None and not self.dead
+                     else 0.0)
+            return self.idle_s + max(extra, 0.0)
+
     def run(self) -> None:
         while True:
-            task = self.inbox.get()
-            if task is None:
-                return
-            if self.dead:
-                continue            # fail-stopped: silently ignore work
-            self._run_task(task)
+            t_wait = time.perf_counter()
+            with self._cv:
+                self._idle_since = t_wait
+                while not self._items and not self._stopped:
+                    self._cv.wait()
+                self._idle_since = None
+                if not self.dead:
+                    self.idle_s += time.perf_counter() - t_wait
+                if not self._items:
+                    return              # stopped and drained
+                tp, chunk_id, r0, r1 = self._items.popleft()
+                tp.running = True
+                self._active = tp
+                if not tp.started:
+                    tp.started = True
+                    tp.t_start = time.perf_counter()
+            try:
+                if self.dead:
+                    # fail-stopped: consume silently, forever
+                    with self._cv:
+                        tp.remaining -= 1
+                else:
+                    self._run_item(tp, chunk_id, r0, r1)
+            finally:
+                with self._cv:
+                    tp.running = False
+                    self._active = None
 
-    def _run_task(self, task: ChunkTask) -> None:
-        t_start = time.perf_counter()
+    def _purge_task(self, tp: _TaskProgress) -> None:
+        """Drop every remaining queued chunk of ``tp`` (cancel/evict/death)."""
+        with self._cv:
+            survivors = [it for it in self._items if it[0] is not tp]
+            # the popped (executing) item plus the purged ones all uncount
+            tp.remaining = 0
+            self._items = deque(survivors)
+
+    def _drop_everything(self) -> None:
+        with self._cv:
+            self._items.clear()
+
+    def _run_item(self, tp: _TaskProgress, chunk_id: int,
+                  r0: int, r1: int) -> None:
+        task = tp.task
         with self._shard_lock:
             a = self.shards.get(task.shard_id)
-        if a is None:               # tenant evicted under us: ack and move on
+        if task.cancel.is_set() or a is None:
+            # cancelled (or tenant unloaded mid-task): remaining chunks
+            # abandoned, ack so the master knows this worker is idle
+            self._purge_task(tp)
             self.events.put(WorkerDone(self.worker_id, task.round_id,
-                                       time.perf_counter(), 0,
-                                       cancelled=True, t_start=t_start))
+                                       time.perf_counter(), tp.done,
+                                       cancelled=True,
+                                       t_start=tp.t_start))
             return
-        done = 0
-        for chunk_id, r0, r1 in task.chunks:
-            with self._shard_lock:
-                evicted = task.shard_id not in self.shards
-            if task.cancel.is_set() or evicted:
-                # cancelled (or tenant unloaded mid-task): remaining chunks
-                # abandoned, ack so the master knows this worker is idle
-                self.events.put(WorkerDone(self.worker_id, task.round_id,
-                                           time.perf_counter(), done,
-                                           cancelled=True, t_start=t_start))
-                return
-            s = self.injector.speed(self.worker_id, task.iteration)
-            if s <= 0.0:
-                self.dead = True    # fail-stop: no event, ever again
-                return
-            t0 = time.perf_counter()
+        s = self.injector.speed(self.worker_id, task.iteration)
+        if s <= 0.0:
+            self.dead = True        # fail-stop: no event, ever again
+            self._drop_everything()
+            return
+        t0 = time.perf_counter()
+        try:
             if self._compute_chunk is not None:
                 y = self._compute_chunk(self.worker_id, task.shard_id, a,
                                         r0, r1, task.x)
             else:
                 y = self.compute(a[r0:r1], task.x)
-            target = (r1 - r0) * task.row_cost / s
-            elapsed = time.perf_counter() - t0
-            if target > elapsed:
-                time.sleep(target - elapsed)
-            t1 = time.perf_counter()
-            self.busy_s += t1 - t0
-            self.events.put(ChunkDone(self.worker_id, task.round_id,
-                                      chunk_id, y, t1, t_start=t_start))
-            done += 1
-        self.events.put(WorkerDone(self.worker_id, task.round_id,
-                                   time.perf_counter(), done,
-                                   t_start=t_start))
+        except Exception as exc:
+            # a backend error is NOT fail-stop silence: report the real
+            # reason terminally, then go dead (every later item is dropped)
+            self.dead = True
+            self.events.put(WorkerFailed(
+                self.worker_id, task.round_id, time.perf_counter(),
+                f"{type(exc).__name__}: {exc}", t_start=tp.t_start))
+            self._drop_everything()
+            return
+        target = (r1 - r0) * task.row_cost / s
+        elapsed = time.perf_counter() - t0
+        if target > elapsed:
+            time.sleep(target - elapsed)
+        t1 = time.perf_counter()
+        self.busy_s += t1 - t0
+        self.events.put(ChunkDone(self.worker_id, task.round_id,
+                                  chunk_id, y, t1, t_start=tp.t_start))
+        with self._cv:
+            tp.done += 1
+            tp.remaining -= 1
+            finished = tp.remaining == 0
+        if finished:
+            self.events.put(WorkerDone(self.worker_id, task.round_id,
+                                       time.perf_counter(), tp.done,
+                                       t_start=tp.t_start))

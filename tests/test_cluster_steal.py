@@ -1,0 +1,453 @@
+"""Chunk-granular work stealing + worker-crash / cache / report fixes.
+
+Covers the PR-3 tentpole and satellites:
+
+* worker-level retractable deque semantics — a retracted chunk is provably
+  never computed, retraction of a task's last queued chunk emits exactly
+  one cancelled-style ack, and ``promote_round`` reorders queued work;
+* engine-level steal correctness — steals fire under backlog, stolen
+  coverage decodes exactly, retracted chunks are never double-counted, and
+  stealing-on vs stealing-off decode **bit-identically** when coverage is
+  forced (n-k fail-stopped workers pin every chunk's responder set);
+* §4.3 waves + cancel-ack isolation while steals and timeouts interleave;
+* the :class:`WorkerFailed` crash path (a raising backend is a logged,
+  fail-over-able failure — not silent fail-stop);
+* the content-keyed LRU x-cache in :class:`KernelBackend`;
+* :meth:`JobService.report`'s first-submit→last-completion throughput
+  window.
+"""
+
+import queue
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.cluster import (ClusterConfig, CodedExecutionEngine,
+                           FailStopInjector, JobService, MatvecJob,
+                           NoSlowdown, TraceInjector, Worker, WorkerFailed)
+from repro.cluster.worker import ChunkDone, ChunkTask, WorkerDone
+from repro.core.strategies import GeneralS2C2, MDSCoded
+
+RNG = np.random.default_rng(29)
+
+
+def make_engine(n, k, injector, row_cost=2e-4, **kw):
+    return CodedExecutionEngine(
+        ClusterConfig(n_workers=n, k=k, row_cost=row_cost, **kw),
+        injector=injector)
+
+
+def make_task(rid, shard_id, chunk_ids, rpc, x, row_cost=1e-6):
+    return ChunkTask(round_id=rid, iteration=0, shard_id=shard_id,
+                     chunks=[(c, c * rpc, (c + 1) * rpc) for c in chunk_ids],
+                     x=x, row_cost=row_cost, cancel=threading.Event())
+
+
+class TestRetractableDeque:
+    """Worker-level semantics, no engine: the steal substrate itself."""
+
+    def _worker(self, compute=None, gate=None):
+        """A worker whose first chunk can be held open by ``gate``."""
+        events = queue.Queue()
+        calls = []
+
+        def fn(a_rows, x):
+            calls.append(len(calls))
+            if gate is not None and len(calls) == 1:
+                gate.wait(timeout=30)
+            return a_rows @ x
+
+        w = Worker(0, events, NoSlowdown(), compute or fn)
+        w.install_shard("s", np.arange(48, dtype=np.float64).reshape(12, 4))
+        w.start()
+        return w, events, calls
+
+    def _drain(self, events, n, timeout=30):
+        out = []
+        for _ in range(n):
+            out.append(events.get(timeout=timeout))
+        return out
+
+    def test_retracted_chunks_are_never_computed(self):
+        gate = threading.Event()
+        w, events, calls = self._worker(gate=gate)
+        try:
+            x = np.ones(4)
+            w.submit(make_task(1, "s", [0, 1, 2, 3, 4, 5], 2, x))
+            # wait until chunk 0 is executing (blocked on the gate)
+            for _ in range(1000):
+                if calls:
+                    break
+                time.sleep(0.001)
+            assert calls and w.backlog(1) == 5 and not w.idle()
+            taken = w.retract(1, [2, 3, 4, 5])
+            assert sorted(taken) == [2, 3, 4, 5]
+            assert w.backlog(1) == 1            # chunk 1 still queued
+            gate.set()
+            evs = self._drain(events, 3)
+            chunk_ids = [e.chunk_id for e in evs if isinstance(e, ChunkDone)]
+            done = [e for e in evs if isinstance(e, WorkerDone)]
+            assert chunk_ids == [0, 1]          # retracted chunks: no events
+            assert len(done) == 1 and not done[0].cancelled
+            assert done[0].chunks_done == 2     # only the computed ones
+            assert w.retracted_total == 4
+            assert w.idle()
+        finally:
+            w.stop()
+            w.join(timeout=10)
+
+    def test_retracting_every_queued_chunk_acks_once(self):
+        """A task fully evaporated by retraction emits exactly one
+        cancelled-style WorkerDone (an ack, not a finish) — while a chunk
+        of the task is still executing, the executor emits the terminal
+        event instead."""
+        gate = threading.Event()
+        w, events, calls = self._worker(gate=gate)
+        try:
+            x = np.ones(4)
+            w.submit(make_task(7, "s", [0, 1, 2], 2, x))
+            for _ in range(1000):
+                if calls:
+                    break
+                time.sleep(0.001)
+            taken = w.retract(7, [1, 2])
+            assert sorted(taken) == [1, 2]
+            gate.set()
+            evs = self._drain(events, 2)
+            # chunk 0 completes, then the task terminates normally
+            assert isinstance(evs[0], ChunkDone) and evs[0].chunk_id == 0
+            assert isinstance(evs[1], WorkerDone) and not evs[1].cancelled
+
+            # second task: retract with nothing executing -> cancelled ack
+            gate2 = threading.Event()
+            w2, events2, calls2 = self._worker(gate=gate2)
+            try:
+                w2.submit(make_task(8, "s", [0], 2, x))       # occupies it
+                w2.submit(make_task(9, "s", [3, 4], 2, x))    # fully queued
+                for _ in range(1000):
+                    if calls2:
+                        break
+                    time.sleep(0.001)
+                assert w2.retract(9, [3, 4]) == [4, 3]  # tail-first
+                gate2.set()
+                evs2 = self._drain(events2, 3)
+                acks = [e for e in evs2 if isinstance(e, WorkerDone)
+                        and e.cancelled]
+                assert len(acks) == 1
+                assert acks[0].round_id == 9 and acks[0].chunks_done == 0
+            finally:
+                w2.stop()
+                w2.join(timeout=10)
+        finally:
+            w.stop()
+            w.join(timeout=10)
+
+    def test_promote_round_reorders_queue(self):
+        gate = threading.Event()
+        w, events, calls = self._worker(gate=gate)
+        try:
+            x = np.ones(4)
+            w.submit(make_task(1, "s", [0, 1], 2, x))     # chunk 0 executes
+            for _ in range(1000):
+                if calls:
+                    break
+                time.sleep(0.001)
+            w.submit(make_task(2, "s", [2, 3], 2, x))
+            w.submit(make_task(3, "s", [4, 5], 2, x))
+            assert w.promote_round(3) == 2
+            assert w.promote_round(99) == 0
+            gate.set()
+            evs = self._drain(events, 9)    # 6 chunks + 3 dones
+            order = [e.round_id for e in evs if isinstance(e, ChunkDone)]
+            # round 1's chunk 0 was already executing; then round 3 jumps
+            # ahead of rounds 1 and 2's queued work
+            assert order == [1, 3, 3, 1, 2, 2]
+        finally:
+            w.stop()
+            w.join(timeout=10)
+
+    def test_retract_is_scoped_to_its_round(self):
+        gate = threading.Event()
+        w, events, calls = self._worker(gate=gate)
+        try:
+            x = np.ones(4)
+            w.submit(make_task(1, "s", [0, 1], 2, x))
+            for _ in range(1000):
+                if calls:
+                    break
+                time.sleep(0.001)
+            w.submit(make_task(2, "s", [1, 2], 2, x))
+            assert w.retract(3, [1, 2]) == []       # unknown round: no-op
+            taken = w.retract(2, [1, 2], limit=1)   # capped, tail-first
+            assert taken == [2]
+            assert w.backlog(2) == 1 and w.backlog(1) == 1
+            gate.set()
+        finally:
+            w.stop()
+            w.join(timeout=10)
+
+
+class TestStealCorrectness:
+    N, K, C, D = 8, 6, 10, 480
+
+    def test_steals_fire_under_backlog_and_decode_exactly(self):
+        """Cold predictor + two heavy stragglers: fast finishers must steal
+        the stragglers' queued chunks before §4.3 fires, and every decode
+        stays exact."""
+        tr = np.ones((100, self.N))
+        tr[:, 0] = tr[:, 1] = 0.05
+        a = RNG.standard_normal((self.D, 32))
+        x = RNG.standard_normal(32)
+        eng = make_engine(self.N, self.K, TraceInjector(tr))
+        try:
+            data = eng.load_matrix(a, chunks=self.C)
+            strat = GeneralS2C2(self.N, self.K, self.D, chunks=self.C)
+            steals = retracted = 0
+            for _ in range(4):
+                out = eng.matvec(data, x, strat)
+                np.testing.assert_allclose(out.y, a @ x, rtol=1e-9,
+                                           atol=1e-9)
+                steals += out.metrics.steals
+                retracted += out.metrics.retracted_chunks
+            assert steals >= 1                 # the steal path really ran
+            assert retracted >= steals         # every steal moved >= 1 chunk
+            stats = eng.worker_stats()
+            assert stats["retracted_chunks"].sum() == retracted
+        finally:
+            eng.shutdown()
+
+    def test_stealing_on_off_bit_identical_under_forced_coverage(self):
+        """With n-k workers fail-stopped from iteration 0, every chunk's
+        responder set is pinned to the k survivors — so the decode input is
+        identical whether chunks were stolen or collected FIFO, and the
+        decoded bytes must match exactly."""
+        n, k, chunks, d = 5, 3, 6, 180
+        a = RNG.standard_normal((d, 16))
+        x = RNG.standard_normal(16)
+
+        def run(steal):
+            eng = make_engine(n, k, FailStopInjector({0: 0, 1: 0}),
+                              row_cost=1e-4, enable_stealing=steal)
+            try:
+                data = eng.load_matrix(a, chunks=chunks)
+                return eng.matvec(data, x,
+                                  GeneralS2C2(n, k, d, chunks=chunks)).y
+            finally:
+                eng.shutdown()
+
+        y_on, y_off = run(True), run(False)
+        assert np.array_equal(y_on, y_off)
+        np.testing.assert_allclose(y_on, a @ x, rtol=1e-9, atol=1e-9)
+
+    def test_steals_timeouts_and_cancel_acks_interleave_cleanly(self):
+        """Two tenants pipelined over a straggler-hit pool: §4.3 waves fire
+        in some rounds, steals in others, cancel acks cross neither round
+        ids nor coverage accounting — all outputs exact, repeatedly."""
+        n, k, chunks, d = 8, 6, 10, 480
+        a = RNG.standard_normal((d, 32))
+        b = RNG.standard_normal((d, 32))
+        x = RNG.standard_normal(32)
+        tr = np.ones((100, n))
+        tr[:, 0] = 0.02
+        eng = make_engine(n, k, TraceInjector(tr), row_cost=1e-4)
+        try:
+            da = eng.load_matrix(a, chunks=chunks)
+            db = eng.load_matrix(b, chunks=chunks)
+            strat = GeneralS2C2(n, k, d, chunks=chunks)
+            waves = steals = 0
+            for _ in range(4):
+                ha = eng.matvec_async(da, x, strat)
+                hb = eng.matvec_async(db, x, strat)
+                oa, ob = ha.result(timeout=60), hb.result(timeout=60)
+                waves += oa.metrics.reassign_waves + ob.metrics.reassign_waves
+                steals += oa.metrics.steals + ob.metrics.steals
+                np.testing.assert_allclose(oa.y, a @ x, rtol=1e-9, atol=1e-9)
+                np.testing.assert_allclose(ob.y, b @ x, rtol=1e-9, atol=1e-9)
+            assert steals >= 1     # stealing active alongside the §4.3 path
+        finally:
+            eng.shutdown()
+
+    def test_mds_never_steals(self):
+        """MDSCoded assigns every chunk to every worker — there is no
+        coverage obligation to move, so the steal pass must be a no-op."""
+        a = RNG.standard_normal((self.D, 16))
+        x = RNG.standard_normal(16)
+        tr = np.ones((40, self.N))
+        tr[:, 0] = 0.1
+        eng = make_engine(self.N, self.K, TraceInjector(tr))
+        try:
+            data = eng.load_matrix(a, chunks=self.C)
+            out = eng.matvec(data, x, MDSCoded(self.N, self.K, self.D))
+            np.testing.assert_allclose(out.y, a @ x, rtol=1e-9, atol=1e-9)
+            assert out.metrics.steals == 0
+            assert out.metrics.retracted_chunks == 0
+        finally:
+            eng.shutdown()
+
+
+class _CrashBackend:
+    """Shard-aware backend that raises on one worker's first compute."""
+
+    def __init__(self, crash_worker: int):
+        self.crash_worker = crash_worker
+
+    def compute_chunk(self, worker_id, shard_id, shard, r0, r1, x):
+        if worker_id == self.crash_worker:
+            raise RuntimeError("injected backend failure")
+        return shard[r0:r1] @ x
+
+
+class TestWorkerCrash:
+    def test_backend_exception_is_reported_not_silent(self):
+        """Regression (satellite 1): a raising backend used to kill the
+        worker thread with no event at all.  Now the worker goes dead AND
+        the master records the real reason, fails the chunks over, and the
+        round still decodes exactly."""
+        n, k, chunks, d = 4, 2, 6, 120
+        a = RNG.standard_normal((d, 8))
+        x = RNG.standard_normal(8)
+        eng = CodedExecutionEngine(
+            ClusterConfig(n_workers=n, k=k, row_cost=1e-4),
+            injector=NoSlowdown(), compute=_CrashBackend(0))
+        try:
+            data = eng.load_matrix(a, chunks=chunks)
+            out = eng.matvec(data, x, GeneralS2C2(n, k, d, chunks=chunks))
+            np.testing.assert_allclose(out.y, a @ x, rtol=1e-9, atol=1e-9)
+            assert 0 in eng.dead                    # declared dead, with...
+            assert "injected backend failure" in eng.failed[0]   # ...reason
+            assert any("injected backend failure" in f
+                       for f in out.metrics.worker_failures)
+            assert eng.workers[0].dead
+            # the engine keeps serving: next round plans around the corpse
+            out2 = eng.matvec(data, x, GeneralS2C2(n, k, d, chunks=chunks))
+            np.testing.assert_allclose(out2.y, a @ x, rtol=1e-9, atol=1e-9)
+        finally:
+            eng.shutdown()
+
+    def test_crash_mid_service_is_logged_and_survived(self):
+        """A crash under the JobService: jobs keep completing and the
+        failure reason is queryable from the engine."""
+        n, k, chunks, d = 4, 2, 4, 64
+        eng = CodedExecutionEngine(
+            ClusterConfig(n_workers=n, k=k, row_cost=1e-5),
+            injector=NoSlowdown(), compute=_CrashBackend(1))
+        svc = JobService(eng, max_queue=32, max_inflight=2)
+        try:
+            rng = np.random.default_rng(3)
+            a = rng.standard_normal((d, 8))
+            handles = [svc.submit(MatvecJob(
+                a, [rng.standard_normal(8)],
+                GeneralS2C2(n, k, d, chunks=chunks), chunks=chunks))
+                for _ in range(4)]
+            svc.drain(timeout=120)
+            assert all(m.error is None for m in svc.completed)
+            for h in handles:
+                want = np.stack([a @ x for x in h.job.xs])
+                np.testing.assert_allclose(h.output, want, rtol=1e-9,
+                                           atol=1e-9)
+            assert 1 in eng.failed
+        finally:
+            svc.close()
+            eng.shutdown()
+
+
+class TestXCacheLRU:
+    def test_alternating_vectors_both_stay_cached(self):
+        """Regression (satellite 2): the single-slot x cache missed on
+        every chunk when two pipelined rounds alternated x vectors; the
+        content-keyed LRU keeps both hot."""
+        from repro.cluster.worker import kernel_backend
+        backend = kernel_backend()
+        a = np.arange(64, dtype=np.float64).reshape(8, 8)
+        x1, x2 = np.ones(8), np.full(8, 2.0)
+        for _ in range(3):      # interleaved, as two concurrent rounds do
+            y1 = backend.compute_chunk(0, "s", a, 0, 8, x1)
+            y2 = backend.compute_chunk(1, "s", a, 0, 8, x2)
+        np.testing.assert_allclose(y1, a @ x1, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(y2, a @ x2, rtol=1e-5, atol=1e-5)
+        info = backend.cache_info()
+        assert info["x_entries"] == 2
+        assert info["x_misses"] == 2            # one upload per vector
+        assert info["x_hits"] == 4              # every later use hits
+        # in-place mutation is a new key, never a stale hit
+        x1[:] = 3.0
+        y3 = backend.compute_chunk(0, "s", a, 0, 8, x1)
+        np.testing.assert_allclose(y3, a @ x1, rtol=1e-5, atol=1e-5)
+        assert backend.cache_info()["x_entries"] == 3
+
+    def test_x_cache_is_lru_capped(self):
+        from repro.cluster.worker import KernelBackend, kernel_backend
+        backend = kernel_backend()
+        a = np.eye(4)
+        for i in range(KernelBackend._X_CACHE_CAP + 5):
+            backend.compute_chunk(0, "s", a, 0, 4, np.full(4, float(i)))
+        assert backend.cache_info()["x_entries"] == KernelBackend._X_CACHE_CAP
+
+
+class TestReplicatedLiveness:
+    def test_slow_but_alive_replicas_are_not_declared_unrecoverable(self):
+        """Regression: the replicated path's give-up rule was an
+        extension-count cap over a VIRTUAL-time deadline, so attempts that
+        were merely slow (or a contended host) got declared 'unrecoverable'
+        while their workers were busily computing.  In-flight attempts are
+        now only abandoned on real event silence (starvation_timeout)."""
+        from repro.cluster import replica_placement
+        from repro.core.strategies import UncodedReplication
+        n, d = 4, 64
+        tr = np.full((50, n), 0.001)        # uniformly glacial — but ALIVE
+        eng = make_engine(n, 3, TraceInjector(tr), row_cost=1e-4)
+        try:
+            a = RNG.standard_normal((d, 8))
+            x = RNG.standard_normal(8)
+            data = eng.load_replicated(a, replica_placement(n, 3, seed=4))
+            # virtual deadline = n_parts*rpp*row_cost*20 ≈ 0.13s; each
+            # partition really takes ~1.6s, so the old cap (5 extensions)
+            # fired a spurious RuntimeError long before any result landed
+            out = eng.matvec(data, x, UncodedReplication(n, d))
+            np.testing.assert_allclose(out.y, a @ x, rtol=1e-9, atol=1e-9)
+        finally:
+            eng.shutdown()
+
+
+class TestReportWindow:
+    def test_idle_then_busy_service_reports_busy_window(self):
+        """Regression (satellite 3): throughput used the service's whole
+        open time, so a service idle before its first submit understated
+        jobs_per_s.  The window is now first-submit -> last-completion."""
+        eng = make_engine(4, 2, NoSlowdown(), row_cost=1e-6)
+        svc = JobService(eng, max_queue=16, max_inflight=2)
+        try:
+            idle = 0.4
+            time.sleep(idle)                    # service open but idle
+            rng = np.random.default_rng(5)
+            a = rng.standard_normal((64, 8))
+            t0 = time.perf_counter()
+            for _ in range(4):
+                svc.submit(MatvecJob(a, [rng.standard_normal(8)],
+                                     GeneralS2C2(4, 2, 64, chunks=4),
+                                     chunks=4))
+            svc.drain(timeout=60)
+            busy = time.perf_counter() - t0
+            rep = svc.report()
+            assert rep.n_jobs == 4
+            # the window must track the busy period, not open time
+            assert rep.wall_time <= busy + 0.1
+            assert rep.wall_time < idle         # i.e. idle time excluded
+            assert rep.jobs_per_s >= 4 / (busy + 0.1)
+        finally:
+            svc.close()
+            eng.shutdown()
+
+    def test_empty_service_falls_back_to_open_window(self):
+        eng = make_engine(4, 2, NoSlowdown(), row_cost=1e-6)
+        svc = JobService(eng, max_queue=4, max_inflight=1)
+        try:
+            time.sleep(0.05)
+            rep = svc.report()
+            assert rep.n_jobs == 0
+            assert rep.wall_time >= 0.05        # open-time fallback
+        finally:
+            svc.close()
+            eng.shutdown()
