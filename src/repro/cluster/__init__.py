@@ -9,10 +9,15 @@ master collects completion *events* (out of order, any-k per chunk index),
 fires the §4.3 timeout/reassign path on mispredictions, and decodes.
 Rounds are keyed by ``round_id`` and pipelined: ``matvec_async`` returns a
 ``RoundHandle`` immediately and independent rounds (same or different
-tenants) share the worker pool chunk-by-chunk.  A ``JobService`` front end
-multiplexes concurrent heterogeneous jobs over one engine through
-``max_inflight`` scheduler slots with per-job latency/waste/throughput
-accounting.
+tenants) share the worker pool chunk-by-chunk.  Rounds are multi-RHS
+generic: ``matmul_async`` runs ``A @ X`` for an ``(d, B)`` block — each
+chunk is one BLAS-3 GEMM pass over the shard and one decode contraction
+covers all B columns — with ``matvec_async`` the B=1 special case.  A
+``JobService`` front end multiplexes concurrent heterogeneous jobs over
+one engine through ``max_inflight`` scheduler slots with per-job
+latency/waste/throughput accounting, and its ``RoundCoalescer`` merges
+compatible concurrent requests against ``share_matrix`` data into batched
+rounds.
 
 Quickstart::
 
@@ -36,7 +41,8 @@ from repro.cluster.master import (ClusterConfig, CodedExecutionEngine,
                                   RoundHandle, RoundOutput)
 from repro.cluster.metrics import JobMetrics, RoundMetrics, ServiceReport
 from repro.cluster.service import (JobService, MatvecJob, PageRankJob,
-                                   RegressionJob, ServiceSaturated)
+                                   RegressionJob, RoundCoalescer,
+                                   ServiceSaturated)
 from repro.cluster.worker import (ChunkDone, KernelBackend, Worker,
                                   WorkerDone, WorkerFailed, kernel_backend)
 
@@ -49,5 +55,5 @@ __all__ = [
     "ClusterConfig", "CodedExecutionEngine", "RoundHandle", "RoundOutput",
     "RoundMetrics", "JobMetrics", "ServiceReport",
     "JobService", "MatvecJob", "PageRankJob", "RegressionJob",
-    "ServiceSaturated",
+    "RoundCoalescer", "ServiceSaturated",
 ]

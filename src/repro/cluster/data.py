@@ -94,16 +94,20 @@ class CodedData:
         """Compact (ids, y_parts) gather of exactly-k per-chunk coverage.
 
         used: per chunk, the k workers whose results were collected;
-        partials: (worker, chunk) -> that worker's chunk result.
+        partials: (worker, chunk) -> that worker's chunk result — a
+        ``(rpc,)`` vector for matvec rounds or a ``(rpc, B)`` block for
+        multi-RHS rounds; ``y_parts`` comes back ``(C, k, rpc)`` or
+        ``(C, k, rpc, B)`` to match.
 
         Responders are SORTED per chunk, which makes the downstream decode
         a pure function of each chunk's coverage *set* — the order workers
         happened to finish (or whether a chunk was stolen mid-round) can
         never change the decoded bits.
         """
-        C, k, rpc = self.chunks, self.k, self.rows_per_chunk
+        C, k = self.chunks, self.k
+        probe = partials[(used[0][0], 0)]
         ids = np.empty((C, k), dtype=np.int64)
-        y_parts = np.empty((C, k, rpc), dtype=np.float64)
+        y_parts = np.empty((C, k) + probe.shape, dtype=np.float64)
         for c in range(C):
             row = sorted(used[c])
             ids[c] = row
@@ -117,8 +121,10 @@ class CodedData:
         """Decode a full round from per-chunk any-k coverage.
 
         coverage: (C, n) bool — exactly the k used workers per chunk.
-        partials: (n, C, rpc) — chunk results (zeros where unused).
-        Returns the decoded product of the ORIGINAL matrix (orig_rows,).
+        partials: (n, C, rpc) — or (n, C, rpc, B) for multi-RHS rounds —
+        chunk results (zeros where unused).
+        Returns the decoded product of the ORIGINAL matrix:
+        (orig_rows,) or (orig_rows, B).
         """
         dms, ids = self.code.chunk_decode_weights_compact(
             coverage, use_cache=use_cache)
@@ -129,33 +135,47 @@ class CodedData:
     def decode_compact(self, dms: np.ndarray, y: np.ndarray,
                        out: Optional[np.ndarray] = None,
                        use_kernel: bool = False) -> np.ndarray:
-        """Hot-path decode: one batched (C, k, k) @ (C, k, rpc) contraction.
+        """Hot-path decode: one batched (C, k, k) @ (C, k, ·) contraction.
 
         dms: per-chunk decode submatrices (from ``decode_submats`` /
         ``chunk_decode_weights_compact``); y: the matching gathered
-        partials.  The result is assembled straight into a preallocated
-        block-major output buffer (``out`` may be supplied to reuse one
-        across rounds).  ``use_kernel=True`` routes the contraction through
-        the batched Pallas ``mds_decode`` kernel in float32 — an explicit
-        opt-in (for TPU hosts) because it trades the default float64
-        precision for kernel throughput; the default is batched float64
-        BLAS on every platform, so results never vary silently by host.
+        partials — ``(C, k, rpc)`` for a matvec round or ``(C, k, rpc, B)``
+        for a multi-RHS round.  One coverage pattern's decode weights
+        apply to ALL B columns in a single contraction (the rpc and B axes
+        fuse into one RHS axis), so the per-round decode cost amortizes
+        ~B× across the batched requests.  The result is assembled straight
+        into a preallocated block-major output buffer (``out`` may be
+        supplied to reuse one across rounds) and returned as
+        ``(orig_rows,)`` or ``(orig_rows, B)``.  ``use_kernel=True`` routes
+        the contraction through the batched Pallas ``mds_decode`` kernel in
+        float32 — an explicit opt-in (for TPU hosts) because it trades the
+        default float64 precision for kernel throughput; the default is
+        batched float64 BLAS on every platform, so results never vary
+        silently by host.
         """
-        C, k, rpc = y.shape
+        C, k, rpc = y.shape[:3]
+        width = y.shape[3] if y.ndim == 4 else None
+        cols = rpc if width is None else rpc * width
         if out is None:
-            out = np.empty(k * C * rpc, dtype=np.float64)
+            out = np.empty(k * C * cols, dtype=np.float64)
         # block-major view: out[block i][chunk c] — matmul writes into the
-        # strided view directly, no per-chunk stacking or transpose copy
-        view = out.reshape(k, C, rpc).transpose(1, 0, 2)
+        # strided view directly, no per-chunk stacking or transpose copy.
+        # For multi-RHS y the (rpc, B) tail flattens row-major, so the same
+        # strided view lands each element exactly where the final
+        # (k·C·rpc, B) reshape expects it.
+        view = out.reshape(k, C, cols).transpose(1, 0, 2)
+        y2 = y.reshape(C, k, cols)
         if use_kernel:
             from repro.kernels import ops
             import jax.numpy as jnp
             dec = ops.mds_decode(jnp.asarray(dms, jnp.float32),
-                                 jnp.asarray(y, jnp.float32))
+                                 jnp.asarray(y2, jnp.float32))
             view[:] = np.asarray(dec, dtype=np.float64)
         else:
-            np.matmul(dms, y, out=view)
-        return out[: self.orig_rows]
+            np.matmul(dms, y2, out=view)
+        if width is None:
+            return out[: self.orig_rows]
+        return out.reshape(k * C * rpc, width)[: self.orig_rows]
 
 
 @dataclasses.dataclass

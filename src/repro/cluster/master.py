@@ -74,7 +74,8 @@ from repro.cluster.data import CodedData, ReplicatedData
 from repro.cluster.injectors import SlowdownInjector
 from repro.cluster.metrics import RoundMetrics
 from repro.cluster.worker import (ChunkDone, ChunkTask, ComputeFn, Worker,
-                                  WorkerDone, WorkerFailed, numpy_backend)
+                                  WorkerDone, WorkerFailed, numpy_backend,
+                                  rhs_width)
 from repro.core.coding import MDSCode
 from repro.core.predictor import SpeedPredictor
 from repro.core.s2c2 import Allocation, expected_makespan
@@ -103,6 +104,17 @@ class ClusterConfig:
     generator_kind: str = "systematic_cauchy"
     decode_with_kernel: bool = False   # opt-in: Pallas mds_decode (float32)
     enable_stealing: bool = True       # idle-triggered chunk steal pass
+    # how many chunks a steal pass retracts from a donor's queue:
+    #   "half"  — flat half of the donor's queued chunks (rounded up to 1);
+    #   "speed" — predicted-speed-proportional share, ⌈backlog ·
+    #             s_idle/(s_idle+s_donor)⌉: a fast idle worker takes most of
+    #             a slow donor's backlog, a slow one takes little
+    steal_sizing: str = "half"
+
+    def __post_init__(self):
+        if self.steal_sizing not in ("half", "speed"):
+            raise ValueError(f"steal_sizing must be 'half' or 'speed', "
+                             f"got {self.steal_sizing!r}")
 
 
 @dataclasses.dataclass
@@ -381,8 +393,37 @@ class CodedExecutionEngine:
         """Execute one coded (or replicated) matrix–vector round (blocking)."""
         return self.matvec_async(data, x, strategy).result()
 
+    def matmul(self, data, x: np.ndarray, strategy) -> RoundOutput:
+        """Execute one multi-RHS round against an ``(d, B)`` block (blocking)."""
+        return self.matmul_async(data, x, strategy).result()
+
     def matvec_async(self, data, x: np.ndarray, strategy) -> RoundHandle:
-        """Start one round and return immediately with a :class:`RoundHandle`.
+        """Start one matvec round; the B=1 special case of ``matmul_async``."""
+        x = np.asarray(x)
+        if x.ndim != 1:
+            raise ValueError(f"matvec_async needs a 1-D x, got shape "
+                             f"{x.shape}; use matmul_async for (d, B) blocks")
+        return self._start_round(data, x, strategy)
+
+    def matmul_async(self, data, x: np.ndarray, strategy) -> RoundHandle:
+        """Start one multi-RHS round: ``y = A @ X`` for an ``(d, B)`` block.
+
+        The whole substrate is width-generic — a chunk is still the unit
+        of dispatch/coverage/stealing/timeout, only its payload widens to
+        ``(rows, B)`` — so §4.3 timeouts, work stealing, failover, and
+        fail-stop detection operate exactly as for matvec rounds, while
+        each worker's chunk compute becomes one BLAS-3 GEMM pass over its
+        shard instead of B BLAS-2 sweeps, and one coverage pattern's
+        decode weights apply to all B columns in a single contraction.
+        """
+        x = np.asarray(x)
+        if x.ndim != 2:
+            raise ValueError(f"matmul_async needs a (d, B) block, got shape "
+                             f"{x.shape}")
+        return self._start_round(data, x, strategy)
+
+    def _start_round(self, data, x: np.ndarray, strategy) -> RoundHandle:
+        """Plan, dispatch, and return a :class:`RoundHandle` immediately.
 
         The round runs on its own driver thread: planning, dispatch, any-k
         collection, §4.3 timeout/reassign, and decode all proceed while the
@@ -391,8 +432,10 @@ class CodedExecutionEngine:
         """
         # snapshot: the caller is free to mutate x the moment this returns
         # (iterative algorithms update in place), while workers read it for
-        # the whole round
+        # the whole round.  The snapshot is marked immutable so shard-aware
+        # backends may soundly identity-key their device copy of it.
         x = np.array(x, dtype=np.float64, copy=True)
+        x.setflags(write=False)
         if isinstance(strategy, UncodedReplication):
             if not isinstance(data, ReplicatedData):
                 raise TypeError("UncodedReplication needs ReplicatedData "
@@ -426,9 +469,17 @@ class CodedExecutionEngine:
     # coded path (MDSCoded / BasicS2C2 / GeneralS2C2)
     # ------------------------------------------------------------------
 
-    def _plan(self, data: CodedData, strategy) -> Tuple[Allocation, float]:
-        """Allocation + planned (virtual-seconds) makespan for this round."""
+    def _plan(self, data: CodedData, strategy,
+              width: int = 1) -> Tuple[Allocation, float]:
+        """Allocation + planned (virtual-seconds) makespan for this round.
+
+        ``width`` is the round's RHS width: a B-wide chunk is B× the
+        virtual work (the workers stretch it accordingly), so every
+        planned-makespan estimate — and with it the §4.3 deadline clock —
+        scales by B.
+        """
         n, k, C = data.n, data.k, data.chunks
+        row_cost = self.cfg.row_cost * width
         pred = self.predicted_speeds()
         if isinstance(strategy, MDSCoded):
             count = np.full(n, C, dtype=np.int64)
@@ -436,7 +487,7 @@ class CodedExecutionEngine:
                                begin=np.zeros(n, dtype=np.int64), count=count)
             # completion is at the k-th fastest full partition
             live = np.sort(pred)[::-1]
-            planned = C * data.rows_per_chunk * self.cfg.row_cost / \
+            planned = C * data.rows_per_chunk * row_cost / \
                 max(float(live[k - 1]), 1e-6)
             return alloc, planned
         if isinstance(strategy, (BasicS2C2, GeneralS2C2)):
@@ -445,12 +496,12 @@ class CodedExecutionEngine:
                                  f"data.chunks={C}")
             alloc = strategy.plan(pred)
             planned = expected_makespan(alloc, pred, data.rows_per_chunk,
-                                        self.cfg.row_cost)
+                                        row_cost)
             if not np.isfinite(planned):
                 # a zero-speed (declared-dead) worker still holding chunks
                 # can blow the estimate up to inf/nan: fall back to a plain
                 # full-partition bound so deadlines stay meaningful
-                planned = C * data.rows_per_chunk * self.cfg.row_cost
+                planned = C * data.rows_per_chunk * row_cost
             return alloc, planned
         raise TypeError(f"unsupported strategy {type(strategy).__name__}")
 
@@ -478,7 +529,12 @@ class CodedExecutionEngine:
         cfg = self.cfg
         n, k, C = data.n, data.k, data.chunks
         rpc = data.rows_per_chunk
-        alloc, planned = self._plan(data, strategy)
+        width = rhs_width(x)            # 1 = matvec, B = multi-RHS round
+        # every per-chunk work estimate this round scales by the RHS width:
+        # the workers stretch B-wide chunks to B× the virtual time, so the
+        # deadline clock, measured speeds, and row accounting must follow
+        work_per_chunk = rpc * width * cfg.row_cost
+        alloc, planned = self._plan(data, strategy, width)
         slack = getattr(strategy, "timeout_slack", cfg.timeout_slack)
         iteration = self.iteration      # snapshot: all dispatches this round
 
@@ -693,11 +749,11 @@ class CodedExecutionEngine:
                     if np.isfinite(state.first_start_t[w]) else t0)
             if np.isfinite(state.finish_t[w]):
                 el = max(state.finish_t[w] - w_t0, 1e-9)
-                speeds[w] = len(state.assigned[w]) * rpc * cfg.row_cost / el
+                speeds[w] = len(state.assigned[w]) * work_per_chunk / el
                 response[w] = el
             elif state.chunks_done[w] > 0:
                 el = max(state.last_event_t[w] - w_t0, 1e-9)
-                speeds[w] = state.chunks_done[w] * rpc * cfg.row_cost / el
+                speeds[w] = state.chunks_done[w] * work_per_chunk / el
                 response[w] = el
             elif self._worker_last_event[w] >= t0:
                 # silent for THIS round but demonstrably alive (events for
@@ -710,7 +766,7 @@ class CodedExecutionEngine:
                 # round and finished not even one chunk, so its speed is at
                 # most one chunk per round (prevents a collapsed worker from
                 # keeping its stale fast prediction forever)
-                speeds[w] = rpc * cfg.row_cost / max(t_done - t0, 1e-9)
+                speeds[w] = work_per_chunk / max(t_done - t0, 1e-9)
                 response[w] = np.inf
         # inactive workers: neutral response (neither skews the first-k mean
         # nor draws a strike)
@@ -719,10 +775,12 @@ class CodedExecutionEngine:
         response = np.where(np.isnan(response), neutral, response)
         self._observe(speeds, response)
 
+        # row accounting is in row-equivalents: a B-wide chunk is rpc·B
+        # rows of work, so useful/wasted stay comparable across widths
         useful = np.array(
             [sum(1 for c in range(C) if w in state.covered_by[c])
-             for w in range(n)], dtype=np.float64) * rpc
-        wasted = state.wasted_chunks.astype(np.float64) * rpc
+             for w in range(n)], dtype=np.float64) * rpc * width
+        wasted = state.wasted_chunks.astype(np.float64) * rpc * width
         metrics = RoundMetrics(
             round_id=rid, strategy=type(strategy).__name__,
             makespan=t_done - t0, compute_time=t_collected - t0,
@@ -732,7 +790,7 @@ class CodedExecutionEngine:
             planned_makespan=planned, reassign_waves=waves,
             mispredicted=mispredicted,
             cancelled_workers=len(state.cancelled),
-            inflight=inflight,
+            inflight=inflight, rhs_width=width,
             steals=state.steals, retracted_chunks=state.retracted,
             worker_failures=tuple(state.failures))
         return RoundOutput(y=y, metrics=metrics)
@@ -789,10 +847,11 @@ class CodedExecutionEngine:
                 # FIFO instead of queueing behind other tenants
                 self.workers[w].promote_round(rid)
                 max_extra = max(max_extra, len(ids))
-        planned_extra = max_extra * data.rows_per_chunk * self.cfg.row_cost
+        row_cost = self.cfg.row_cost * rhs_width(x)
+        planned_extra = max_extra * data.rows_per_chunk * row_cost
         if short:
             planned_extra = max(planned_extra,
-                                C * data.rows_per_chunk * self.cfg.row_cost)
+                                C * data.rows_per_chunk * row_cost)
         return planned_extra
 
     # ------------------------------------------------------------------
@@ -838,16 +897,29 @@ class CodedExecutionEngine:
         # most backlogged first — TOTAL queue length (all rounds), because
         # that is what actually delays the donor's queued chunks
         donors.sort(key=lambda w: -self.workers[w].backlog())
+        # speed-aware sizing uses one predicted-speed snapshot per pass
+        pred = (self.predicted_speeds() if cfg.steal_sizing == "speed"
+                else None)
         for wb in donors:
             queued = self.workers[wb].backlog(rid)
             if queued <= 0:
                 continue        # everything already executing / completed
             want = sorted(state.outstanding[wb] & eligible)
-            # take at most half the donor's queue (rounded up to one): the
-            # donor keeps the work it can start soonest, wi fills from the
-            # tail that would otherwise run last
-            taken = self.workers[wb].retract(rid, want,
-                                             limit=max(1, queued // 2))
+            if pred is not None:
+                # predicted-speed share: the idle worker takes the fraction
+                # of the donor's backlog it would finish first if the two
+                # split it in proportion to their speeds — a fast idle
+                # worker drains most of a straggler's queue in one pass, a
+                # slow one takes a sliver instead of half
+                s_idle = max(float(pred[wi]), 1e-3)
+                s_donor = max(float(pred[wb]), 1e-3)
+                cap = int(np.ceil(queued * s_idle / (s_idle + s_donor)))
+            else:
+                # flat half of the donor's queue: the donor keeps the work
+                # it can start soonest, wi fills from the tail that would
+                # otherwise run last
+                cap = queued // 2
+            taken = self.workers[wb].retract(rid, want, limit=max(1, cap))
             if not taken:
                 continue        # raced: the executor got there first
             for c in taken:
@@ -934,6 +1006,8 @@ class CodedExecutionEngine:
         iteration = self.iteration
         t0 = time.perf_counter()
         rpp = data.rows_per_part
+        width = rhs_width(x)            # replicated rounds are width-generic
+        work_per_part = rpp * width * cfg.row_cost
 
         results: List[Optional[np.ndarray]] = [None] * n_parts
         attempt_owner: Dict[int, List[int]] = {p: [] for p in range(n_parts)}
@@ -958,7 +1032,7 @@ class CodedExecutionEngine:
 
         spec_budget = strategy.max_speculative
         n_done = 0
-        deadline = t0 + n_parts * rpp * cfg.row_cost * 20    # liveness bound
+        deadline = t0 + n_parts * work_per_part * 20    # liveness bound
         speculated = False
         last_arrival = t0
         while n_done < n_parts:
@@ -1012,7 +1086,7 @@ class CodedExecutionEngine:
                         f"replicated round {rid}: {n_parts - n_done} "
                         "partitions stuck — in-flight attempts silent for "
                         f"{cfg.starvation_timeout}s (fail-stopped replicas?)")
-                deadline = time.perf_counter() + n_parts * rpp * cfg.row_cost * 20
+                deadline = time.perf_counter() + n_parts * work_per_part * 20
                 continue
 
             last_arrival = time.perf_counter()
@@ -1087,27 +1161,28 @@ class CodedExecutionEngine:
                 # so fall back to collection end as the response time
                 el = max((finish_t[w] if np.isfinite(finish_t[w])
                           else t_collected) - t0, 1e-9)
-                speeds[w] = rows_done[w] * cfg.row_cost / el
+                speeds[w] = rows_done[w] * width * cfg.row_cost / el
                 response[w] = el
             elif self._worker_last_event[w] >= t0:
                 continue    # alive on other rounds: no measurement/strike
             else:
                 # silent primary: censored bound (see coded path)
-                speeds[w] = rpp * cfg.row_cost / max(t_done - t0, 1e-9)
+                speeds[w] = work_per_part / max(t_done - t0, 1e-9)
                 response[w] = np.inf
         finite = response[np.isfinite(response)]
         neutral = float(np.median(finite)) if finite.size else 0.0
         response = np.where(np.isnan(response), neutral, response)
         self._observe(speeds, response)
 
-        useful = rows_done - wasted
+        # row-equivalents, matching the coded path: width scales the work
+        useful = (rows_done - wasted) * width
         metrics = RoundMetrics(
             round_id=rid, strategy=type(strategy).__name__,
             makespan=t_done - t0, compute_time=t_collected - t0,
             decode_time=t_done - t_collected, useful_rows=useful,
-            wasted_rows=wasted,
+            wasted_rows=wasted * width,
             speeds_measured=np.where(np.isfinite(speeds), speeds, 0.0),
-            planned_makespan=rpp * cfg.row_cost,
+            planned_makespan=work_per_part,
             mispredicted=speculated,
-            inflight=inflight)
+            inflight=inflight, rhs_width=width)
         return RoundOutput(y=y, metrics=metrics)

@@ -32,14 +32,21 @@ class RoundMetrics:
     makespan: float                   # wall seconds, dispatch → decoded
     compute_time: float               # dispatch → last used completion
     decode_time: float
-    useful_rows: np.ndarray           # (n,) rows used in the decode
-    wasted_rows: np.ndarray           # (n,) rows computed but not used
+    useful_rows: np.ndarray           # (n,) row-equivalents used in the
+    #                                   decode (rows × RHS width)
+    wasted_rows: np.ndarray           # (n,) row-equivalents computed unused
     speeds_measured: np.ndarray       # (n,) rows/s · row_cost (1.0 = nominal)
     planned_makespan: float           # master's own prediction (virtual s)
     reassign_waves: int = 0
     mispredicted: bool = False
     cancelled_workers: int = 0
     inflight: int = 1                 # rounds in flight when this one started
+    rhs_width: int = 1                # B: RHS columns of this round (1=matvec)
+    coalesced: int = 1                # requests merged into this round; a
+    #                                   follower's ride-along copy keeps the
+    #                                   timing but zeroes the resource rows
+    #                                   so service totals count the shared
+    #                                   round exactly once
     steals: int = 0                   # successful idle-triggered steal passes
     retracted_chunks: int = 0         # chunks retracted and re-dispatched
     worker_failures: tuple = ()       # WorkerFailed reasons seen this round
@@ -119,6 +126,9 @@ class ServiceReport:
     peak_inflight: int = 1            # max jobs observed in service at once
     total_steals: int = 0             # idle-triggered steal passes, all rounds
     total_retracted: int = 0          # chunks retracted and re-dispatched
+    coalesced_requests: int = 0       # requests that rode a merged
+    #                                   multi-RHS round (coalescer admission)
+    batched_rounds: int = 0           # engine rounds executed with B > 1
 
     @classmethod
     def from_jobs(cls, jobs: List[JobMetrics], wall_time: float,
@@ -129,6 +139,12 @@ class ServiceReport:
         useful = sum(j.useful_rows for j in jobs)
         wasted = sum(j.wasted_rows for j in jobs)
         n_rounds = sum(len(j.rounds) for j in jobs)
+        all_rounds = [r for j in jobs for r in j.rounds]
+        # a merged round appears once per participant (same round_id), so
+        # participants count requests and distinct ids count engine rounds
+        coalesced_requests = sum(1 for r in all_rounds if r.coalesced > 1)
+        batched_rounds = len({r.round_id for r in all_rounds
+                              if r.rhs_width > 1})
         by: Dict[str, Dict[str, float]] = {}
         for strat in sorted({j.strategy for j in jobs}):
             js = [j for j in jobs if j.strategy == strat]
@@ -157,7 +173,9 @@ class ServiceReport:
             by_strategy=by, max_inflight=max_inflight,
             peak_inflight=peak_inflight,
             total_steals=sum(j.steals for j in jobs),
-            total_retracted=sum(j.retracted_chunks for j in jobs))
+            total_retracted=sum(j.retracted_chunks for j in jobs),
+            coalesced_requests=coalesced_requests,
+            batched_rounds=batched_rounds)
 
     def format(self) -> str:
         lines = [
@@ -172,7 +190,9 @@ class ServiceReport:
             f"p99={self.p99_queue_wait * 1e3:.1f}ms  "
             f"wasted={self.wasted_fraction * 100:.1f}%  "
             f"steals={self.total_steals} "
-            f"(retracted_chunks={self.total_retracted})",
+            f"(retracted_chunks={self.total_retracted})  "
+            f"coalesced={self.coalesced_requests} reqs "
+            f"in {self.batched_rounds} batched rounds",
         ]
         for strat, s in self.by_strategy.items():
             lines.append(

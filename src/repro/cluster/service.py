@@ -11,9 +11,26 @@ worker pool.
 serving tier needs), and every job records queue wait, per-round execution
 metrics, and wasted work, aggregated by :meth:`JobService.report`.
 
+**Request coalescing.**  Serving traffic queries the *same* encoded
+matrix from many concurrent jobs (the PageRank / graph-filter scenario),
+so the service runs a :class:`RoundCoalescer` in front of the engine:
+matvec requests from different jobs that are *compatible* — same shared
+:class:`~repro.cluster.data.CodedData` (see
+:meth:`JobService.share_matrix`), structurally identical strategy, same
+operand shape — are merged, up to ``max_batch`` at a time, into ONE
+multi-RHS round (``engine.matmul``) whose ``(rows, B)`` chunks run as
+single BLAS-3 passes over each shard, then fanned back out to the
+per-job callers.  One set of dispatch/steal/decode/event overheads is
+paid instead of B, and iterative jobs (PageRank, regression) re-coalesce
+on every iteration.  Incompatible requests never merge, and a merged
+round's failure propagates to each participant independently (per-job
+fault isolation is unchanged).  ``coalesce=False`` restores the PR-3
+service exactly.
+
 Job kinds (the §6.3 workloads):
 
-* :class:`MatvecJob`    — a batch of raw coded matvecs against one matrix;
+* :class:`MatvecJob`    — a batch of raw coded matvecs against one matrix
+  (optionally ``batch``-ed into multi-RHS rounds by the job itself);
 * :class:`PageRankJob`  — damped power iterations (x drifts every round);
 * :class:`RegressionJob`— coded-gradient-descent epochs for logistic / SVM
   losses (the Ax product is the coded part, as in the paper).
@@ -25,35 +42,202 @@ import dataclasses
 import queue
 import threading
 import time
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
-from repro.cluster.data import replica_placement
-from repro.cluster.master import CodedExecutionEngine
-from repro.cluster.metrics import JobMetrics, ServiceReport
+from repro.cluster.data import CodedData, replica_placement
+from repro.cluster.master import CodedExecutionEngine, RoundOutput
+from repro.cluster.metrics import JobMetrics, RoundMetrics, ServiceReport
 from repro.core.strategies import UncodedReplication
 
 __all__ = ["Job", "MatvecJob", "PageRankJob", "RegressionJob",
-           "JobService", "ServiceSaturated", "JobHandle"]
+           "JobService", "ServiceSaturated", "JobHandle", "RoundCoalescer"]
 
 
 class ServiceSaturated(RuntimeError):
     """The bounded admission queue is full — resubmit later."""
 
 
+def _strategy_key(strategy) -> Tuple:
+    """Structural compatibility fingerprint of a strategy instance.
+
+    Two instances of the same class with the same scalar parameters plan
+    identically, so their requests may share one batched round — jobs get
+    their own strategy objects, and identity must not block merging.
+    Non-scalar attributes (prediction snapshots, placements) are derived
+    state, not plan inputs, and are excluded.
+    """
+    scalars = tuple(sorted(
+        (name, v) for name, v in vars(strategy).items()
+        if isinstance(v, (int, float, str, bool))))
+    return (type(strategy).__name__,) + scalars
+
+
+def _follower_metrics(m: RoundMetrics) -> RoundMetrics:
+    """Ride-along round entry for a merged round's non-leader participants.
+
+    Keeps the round's timing, width, and merge count (latency accounting
+    per job stays truthful) but zeroes the resource counters so
+    service-level row/steal totals count the shared round exactly once —
+    on the leader's copy.
+    """
+    return dataclasses.replace(
+        m, useful_rows=np.zeros_like(m.useful_rows),
+        wasted_rows=np.zeros_like(m.wasted_rows),
+        steals=0, retracted_chunks=0, worker_failures=())
+
+
+class _CoalesceGroup:
+    """One forming batch: requests accumulate until full or the hold expires."""
+
+    __slots__ = ("xs", "closed", "full", "done", "outputs", "metrics",
+                 "error")
+
+    def __init__(self):
+        self.xs: List[np.ndarray] = []
+        self.closed = False                  # no further admissions
+        self.full = threading.Event()        # max_batch reached early
+        self.done = threading.Event()        # outputs/error published
+        self.outputs: Optional[List[np.ndarray]] = None
+        self.metrics: Optional[RoundMetrics] = None
+        self.error: Optional[BaseException] = None
+
+
+class RoundCoalescer:
+    """Merge compatible concurrent matvec requests into multi-RHS rounds.
+
+    The first request of a compatibility key becomes the group *leader*:
+    it holds the round open for ``hold_s`` (or until ``max_batch``
+    requests joined), then launches one ``engine.matmul`` over the stacked
+    ``(d, B)`` block and hands each participant its own output column.  A
+    group of one degenerates to a plain ``engine.matvec`` — bit-identical
+    to the uncoalesced path.  Errors propagate to every participant
+    independently; a group can never deadlock its followers because the
+    leader publishes (result or error) in a ``finally``.
+    """
+
+    def __init__(self, engine: CodedExecutionEngine, max_batch: int = 8,
+                 hold_s: float = 1e-3):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.engine = engine
+        self.max_batch = max_batch
+        self.hold_s = hold_s
+        self._lock = threading.Lock()
+        self._groups: Dict[Tuple, _CoalesceGroup] = {}
+        self.merged_rounds = 0       # batched rounds launched (B >= 2)
+        self.merged_requests = 0     # requests served via batched rounds
+
+    def matvec(self, data: CodedData, x: np.ndarray,
+               strategy) -> RoundOutput:
+        """Serve one matvec request, possibly as a column of a merged round."""
+        x = np.asarray(x, dtype=np.float64)
+        key = (data.shard_id, x.shape, _strategy_key(strategy))
+        with self._lock:
+            grp = self._groups.get(key)
+            leader = grp is None or grp.closed
+            if leader:
+                grp = _CoalesceGroup()
+                self._groups[key] = grp
+            idx = len(grp.xs)
+            grp.xs.append(x.copy())          # caller may mutate x after
+            if len(grp.xs) >= self.max_batch:
+                grp.closed = True
+                grp.full.set()
+        if leader:
+            self._lead(key, grp, data, strategy)
+        else:
+            # the engine's own starvation detector is the liveness bound;
+            # the leader publishes in a finally, so this always returns
+            grp.done.wait()
+        if grp.error is not None:
+            raise grp.error
+        assert grp.outputs is not None and grp.metrics is not None
+        metrics = grp.metrics if idx == 0 else _follower_metrics(grp.metrics)
+        return RoundOutput(y=grp.outputs[idx], metrics=metrics)
+
+    def _lead(self, key: Tuple, grp: _CoalesceGroup, data: CodedData,
+              strategy) -> None:
+        grp.full.wait(self.hold_s)
+        with self._lock:
+            grp.closed = True                # freeze admissions
+            if self._groups.get(key) is grp:
+                del self._groups[key]
+            xs = list(grp.xs)
+        try:
+            if len(xs) == 1:
+                out = self.engine.matvec(data, xs[0], strategy)
+                grp.outputs = [out.y]
+                grp.metrics = out.metrics
+            else:
+                out = self.engine.matmul(data, np.stack(xs, axis=1),
+                                         strategy)
+                grp.outputs = [np.ascontiguousarray(out.y[:, j])
+                               for j in range(len(xs))]
+                grp.metrics = dataclasses.replace(out.metrics,
+                                                  coalesced=len(xs))
+                with self._lock:
+                    self.merged_rounds += 1
+                    self.merged_requests += len(xs)
+        except BaseException as exc:         # every participant re-raises
+            grp.error = exc
+        finally:
+            grp.done.set()
+
+
+class _CoalescingEngine:
+    """Engine facade handed to :meth:`Job.rounds`.
+
+    Routes coalescable matvecs — coded strategy against a matrix the
+    service registered as shared — through the :class:`RoundCoalescer`;
+    everything else (private tenant data, replicated strategies, direct
+    ``matmul`` calls, attribute access) passes straight through, so jobs
+    are written against the engine API and never see the difference.
+    """
+
+    def __init__(self, engine: CodedExecutionEngine,
+                 coalescer: Optional[RoundCoalescer],
+                 shared_ids: Set[str]):
+        self._engine = engine
+        self._coalescer = coalescer
+        self._shared_ids = shared_ids
+
+    def matvec(self, data, x: np.ndarray, strategy) -> RoundOutput:
+        if (self._coalescer is not None
+                and getattr(data, "shard_id", None) in self._shared_ids
+                and not isinstance(strategy, UncodedReplication)):
+            return self._coalescer.matvec(data, x, strategy)
+        return self._engine.matvec(data, x, strategy)
+
+    def __getattr__(self, name):
+        return getattr(self._engine, name)
+
+
 class Job:
-    """One tenant workload: a matrix + a sequence of dependent rounds."""
+    """One tenant workload: a matrix + a sequence of dependent rounds.
+
+    ``data`` may carry an already-loaded :class:`CodedData` (typically from
+    :meth:`JobService.share_matrix`): the job then skips its private
+    encode/install, many jobs can query the same shards, and — when the
+    service coalesces — their concurrent rounds become candidates for
+    multi-RHS merging.  Shared data is owned by whoever loaded it; the
+    service never unloads it at job end.
+    """
 
     kind = "job"
 
-    def __init__(self, a: np.ndarray, strategy, chunks: int = 20):
+    def __init__(self, a: np.ndarray, strategy, chunks: int = 20,
+                 data: Optional[CodedData] = None):
         self.a = np.asarray(a, dtype=np.float64)
         self.strategy = strategy
         self.chunks = chunks
+        self.data = data
 
     # -- engine interaction -------------------------------------------------
     def prepare(self, engine: CodedExecutionEngine):
+        if self.data is not None:
+            return self.data
         if isinstance(self.strategy, UncodedReplication):
             placement = replica_placement(engine.cfg.n_workers,
                                           self.strategy.replication,
@@ -67,21 +251,39 @@ class Job:
 
 
 class MatvecJob(Job):
-    """Batch of independent matvecs A @ x_i (raw serving traffic)."""
+    """Batch of independent matvecs A @ x_i (raw serving traffic).
+
+    ``batch > 1`` groups the job's own vectors into ``(d, batch)``
+    multi-RHS rounds (one GEMM round instead of ``batch`` matvec rounds);
+    the default 1 preserves the one-round-per-vector behavior, and
+    cross-job merging is the coalescer's business either way.
+    """
 
     kind = "matvec"
 
     def __init__(self, a, xs: Sequence[np.ndarray], strategy,
-                 chunks: int = 20):
-        super().__init__(a, strategy, chunks)
+                 chunks: int = 20, batch: int = 1,
+                 data: Optional[CodedData] = None):
+        super().__init__(a, strategy, chunks, data=data)
         self.xs = [np.asarray(x, dtype=np.float64) for x in xs]
+        if batch < 1:
+            raise ValueError(f"batch must be >= 1, got {batch}")
+        self.batch = batch
 
     def rounds(self, engine, data, record):
         outs = []
-        for x in self.xs:
-            out = engine.matvec(data, x, self.strategy)
-            record(out.metrics)
-            outs.append(out.y)
+        for i in range(0, len(self.xs), self.batch):
+            grp = self.xs[i:i + self.batch]
+            if len(grp) == 1:
+                out = engine.matvec(data, grp[0], self.strategy)
+                record(out.metrics)
+                outs.append(out.y)
+            else:
+                out = engine.matmul(data, np.stack(grp, axis=1),
+                                    self.strategy)
+                record(out.metrics)
+                outs.extend(np.ascontiguousarray(out.y[:, j])
+                            for j in range(len(grp)))
         return np.stack(outs)
 
 
@@ -91,8 +293,8 @@ class PageRankJob(Job):
     kind = "pagerank"
 
     def __init__(self, m, strategy, iters: int = 10, damping: float = 0.85,
-                 chunks: int = 20):
-        super().__init__(m, strategy, chunks)
+                 chunks: int = 20, data: Optional[CodedData] = None):
+        super().__init__(m, strategy, chunks, data=data)
         self.iters = iters
         self.damping = damping
 
@@ -112,8 +314,9 @@ class RegressionJob(Job):
     kind = "regression"
 
     def __init__(self, a, y, strategy, epochs: int = 5, loss: str = "logistic",
-                 lr: float = 0.5, chunks: int = 20):
-        super().__init__(a, strategy, chunks)
+                 lr: float = 0.5, chunks: int = 20,
+                 data: Optional[CodedData] = None):
+        super().__init__(a, strategy, chunks, data=data)
         self.y = np.asarray(y, dtype=np.float64)
         self.epochs = epochs
         self.loss = loss
@@ -157,10 +360,17 @@ class JobService:
     over the worker pool.  With ``max_inflight=1`` this degenerates to the
     old serialized run loop; higher values overlap one tenant's straggler /
     collect / decode slack with other tenants' useful compute.
+
+    With ``coalesce=True`` (default) a :class:`RoundCoalescer` merges
+    compatible concurrent requests against :meth:`share_matrix` data into
+    multi-RHS rounds — up to ``max_batch`` requests per round, held open
+    for at most ``coalesce_hold_s``.  Jobs on private (per-job) data never
+    pay the hold and never merge.
     """
 
     def __init__(self, engine: CodedExecutionEngine, max_queue: int = 256,
-                 max_inflight: int = 4):
+                 max_inflight: int = 4, coalesce: bool = True,
+                 max_batch: int = 8, coalesce_hold_s: float = 1e-3):
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
         self.engine = engine
@@ -174,12 +384,34 @@ class JobService:
         self._peak_inflight = 0        # max jobs observed in service at once
         self._t_open = time.perf_counter()
         self._t_first_submit: Optional[float] = None   # throughput window
+        self._shared_ids: Set[str] = set()   # shard ids owned by the service
+        self._shared_data: List[CodedData] = []
+        self.coalescer = (RoundCoalescer(engine, max_batch, coalesce_hold_s)
+                          if coalesce else None)
+        self._exec = _CoalescingEngine(engine, self.coalescer,
+                                       self._shared_ids)
         self._threads = [
             threading.Thread(target=self._run, name=f"job-slot-{i}",
                              daemon=True)
             for i in range(max_inflight)]
         for t in self._threads:
             t.start()
+
+    # -- shared tenant data -------------------------------------------------
+    def share_matrix(self, a: np.ndarray, chunks: int = 20,
+                     code=None) -> CodedData:
+        """Encode + install a matrix ONCE, to be queried by many jobs.
+
+        Jobs constructed with ``data=`` skip their private encode/load, and
+        their concurrent rounds against the shared matrix are coalescing
+        admission candidates.  The service owns the shards: they stay
+        installed until :meth:`close`.
+        """
+        data = self.engine.load_matrix(a, chunks=chunks, code=code)
+        with self._lock:
+            self._shared_ids.add(data.shard_id)
+            self._shared_data.append(data)
+        return data
 
     # -- producer side ------------------------------------------------------
     def submit(self, job: Job) -> JobHandle:
@@ -224,6 +456,11 @@ class JobService:
             self.queue.put(None)
         for t in self._threads:
             t.join(timeout=30.0)
+        with self._lock:
+            shared, self._shared_data = self._shared_data, []
+            self._shared_ids.clear()
+        for data in shared:
+            self.engine.unload(data)
 
     # -- scheduler side -----------------------------------------------------
     def _run(self) -> None:
@@ -243,14 +480,16 @@ class JobService:
                 self._peak_inflight = max(self._peak_inflight,
                                           self._in_service)
             data = None
+            owned = False
             try:
                 data = handle.job.prepare(self.engine)
+                owned = handle.job.data is None     # shared data outlives jobs
                 handle.output = handle.job.rounds(
-                    self.engine, data, m.rounds.append)
+                    self._exec, data, m.rounds.append)
             except Exception as exc:          # record, don't kill the service
                 m.error = f"{type(exc).__name__}: {exc}"
             finally:
-                if data is not None:
+                if data is not None and owned:
                     self.engine.unload(data)
             m.t_done = time.perf_counter()
             with self._lock:

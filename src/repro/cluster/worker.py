@@ -23,25 +23,30 @@ the master may
   idle-triggered steal pass.
 
 Speed injection: before each chunk the worker asks its injector for the
-current speed ``s`` and stretches the chunk to ``rows · row_cost / s``
-seconds of wall time (compute runs natively; the remainder is slept, so the
-throttling is real wall-clock, not bookkeeping).  ``s == 0`` ⇒ fail-stop:
+current speed ``s`` and stretches the chunk to ``rows · B · row_cost / s``
+seconds of wall time, where ``B`` is the RHS width (compute runs natively;
+the remainder is slept, so the throttling is real wall-clock, not
+bookkeeping).  A multi-RHS chunk does ``B×`` the work of a matvec chunk,
+so it must pay ``B×`` the virtual time — otherwise injector-driven
+benchmarks would silently under-throttle batched rounds and the
+exec-vs-sim calibration would drift.  ``s == 0`` ⇒ fail-stop:
 the worker drops all work silently and ignores everything from then on.
 A backend *exception* is the opposite of fail-stop silence: the worker
 emits a terminal :class:`WorkerFailed` event carrying the real error before
 going dead, so the master can log a reason and fail over immediately
 instead of waiting out the §4.4 silence detector.
 
-The compute backend is pluggable: the default is the BLAS matvec
-(``a[rows] @ x``); :class:`KernelBackend` (via :func:`kernel_backend`)
-routes each chunk through the Pallas ``coded_matvec`` kernel (interpret
-mode off-TPU) — same semantics, exercised by the demo to prove the engine
-drives ``repro.kernels``.  A backend may additionally implement the
-shard-aware protocol (``compute_chunk(worker_id, shard_id, shard, r0, r1,
-x)`` plus optional ``drop_shard(worker_id, shard_id)``): the worker then
-hands it the whole shard and the chunk range, which lets the backend keep
-a device-resident copy of each shard instead of re-uploading rows on every
-chunk.
+The compute backend is pluggable: the default is plain BLAS
+(``a[rows] @ x`` — a BLAS-2 matvec for a 1-D operand, one BLAS-3 GEMM for
+an ``(d, B)`` multi-RHS block); :class:`KernelBackend` (via
+:func:`kernel_backend`) routes each chunk through the Pallas
+``coded_matvec`` kernel (interpret mode off-TPU) — same semantics,
+exercised by the demo to prove the engine drives ``repro.kernels``.  A
+backend may additionally implement the shard-aware protocol
+(``compute_chunk(worker_id, shard_id, shard, r0, r1, x)`` plus optional
+``drop_shard(worker_id, shard_id)``): the worker then hands it the whole
+shard and the chunk range, which lets the backend keep a device-resident
+copy of each shard instead of re-uploading rows on every chunk.
 """
 
 from __future__ import annotations
@@ -49,6 +54,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
+import weakref
 from collections import OrderedDict, deque
 from typing import (Callable, Deque, Dict, List, Optional, Sequence, Set,
                     Tuple)
@@ -56,9 +62,14 @@ from typing import (Callable, Deque, Dict, List, Optional, Sequence, Set,
 import numpy as np
 
 __all__ = ["ChunkTask", "ChunkDone", "WorkerDone", "WorkerFailed", "Worker",
-           "numpy_backend", "kernel_backend", "KernelBackend"]
+           "numpy_backend", "kernel_backend", "KernelBackend", "rhs_width"]
 
 ComputeFn = Callable[[np.ndarray, np.ndarray], np.ndarray]
+
+
+def rhs_width(x: np.ndarray) -> int:
+    """Number of RHS columns: 1 for a vector, B for an ``(d, B)`` block."""
+    return 1 if x.ndim == 1 else int(x.shape[1])
 
 
 @dataclasses.dataclass
@@ -66,9 +77,13 @@ class ChunkTask:
     """One dispatch: compute ``chunks`` of shard ``shard_id`` against ``x``.
 
     chunks: list of (chunk_id, row_start, row_stop) in computation order.
-    row_cost: seconds of *virtual* wall time per row at speed 1.0 (the
-        engine's calibration knob — real compute below it is topped up by
-        sleeping, which is how injected slowdowns throttle real work).
+    x: the round's RHS operand — a ``(d,)`` vector (matvec round) or an
+        ``(d, B)`` multi-RHS block (batched round); each chunk then yields
+        a ``(rows,)`` or ``(rows, B)`` partial.
+    row_cost: seconds of *virtual* wall time per row PER RHS COLUMN at
+        speed 1.0 (the engine's calibration knob — real compute below it is
+        topped up by sleeping, which is how injected slowdowns throttle
+        real work; a B-wide chunk is stretched to B× the matvec time).
     cancel: master-held event; checked before every chunk.
     """
 
@@ -153,12 +168,16 @@ class KernelBackend:
     * each (worker_id, shard_id) shard is converted/uploaded ONCE and kept
       device-resident (float32, the kernel's compute dtype) until the
       tenant is unloaded (``drop_shard``);
-    * the per-chunk operand x is cached in a small content-keyed LRU (see
-      ``_device_x``) so pipelined tenants alternating x vectors all stay
-      cached at once;
-    * chunk row counts are bucketed to the next power of two (floor 8), so
-      heterogeneous tenants land on a handful of kernel shapes instead of
-      retracing the jit for every distinct ``rows_per_chunk``.
+    * the per-chunk operand x is cached in a small LRU (see ``_device_x``)
+      so pipelined tenants alternating RHS operands all stay cached at
+      once; small operands are content-keyed, large immutable blocks are
+      identity-keyed (content-keying an ``(d, B)`` block would cost
+      O(d·B) per chunk);
+    * chunk row counts are bucketed to the next power of two (floor 8), and
+      multi-RHS widths to the next power of two (floor 1), so
+      heterogeneous tenants and coalesced batch widths land on a handful
+      of kernel shapes instead of retracing the jit for every distinct
+      ``(rows_per_chunk, B)``.
 
     One instance is shared by all workers of ONE engine (shard ids are
     engine-scoped — do not share a backend between engines); cache
@@ -170,6 +189,7 @@ class KernelBackend:
 
     _SHARD_CACHE_CAP = 128
     _X_CACHE_CAP = 16
+    _X_HASH_CAP = 64 * 1024        # max bytes content-keyed per lookup
 
     def __init__(self, interpret: Optional[bool] = None,
                  row_bucket_floor: int = 8):
@@ -181,13 +201,16 @@ class KernelBackend:
         self.row_bucket_floor = row_bucket_floor
         self._lock = threading.Lock()
         self._shards: "OrderedDict[Tuple[int, str], object]" = OrderedDict()
-        # content-keyed x LRU: one slot per distinct operand vector, so
-        # concurrent rounds alternating x vectors (pipelined tenants) each
-        # keep their device copy instead of evicting one another on every
-        # chunk.  Keying by the bytes also makes the old stale-pair race
-        # impossible: a (snapshot, device) pair was written in two steps
-        # under interleaved writers; here key and value land atomically.
-        self._x_cache: "OrderedDict[Tuple, object]" = OrderedDict()
+        # x LRU: one slot per distinct operand, so concurrent rounds
+        # alternating RHS operands (pipelined tenants) each keep their
+        # device copy instead of evicting one another on every chunk.
+        # Entries are (weakref-anchor-or-None, device) pairs — see
+        # _device_x for the keying scheme and how the weakref keeps
+        # identity keys sound without pinning dead rounds' host arrays.
+        # Key and value land atomically under the lock, so the old
+        # stale-pair race (a (snapshot, device) pair written in two steps
+        # by interleaved writers) is impossible.
+        self._x_cache: "OrderedDict[Tuple, Tuple]" = OrderedDict()
         self._x_hits = 0
         self._x_misses = 0
 
@@ -207,21 +230,60 @@ class KernelBackend:
                     self._shards.popitem(last=False)
         return dev
 
-    def _device_x(self, x: np.ndarray):
-        # content-keyed, not identity-keyed: callers legitimately mutate x
-        # in place between rounds (e.g. gradient descent's `w -= ...`)
-        # while reusing the same array object — new contents, new key
-        key = (x.shape, x.dtype.str, x.tobytes())
+    def _upload_x(self, x: np.ndarray, pad_cols: int):
+        if pad_cols:
+            x = np.pad(x, ((0, 0), (0, pad_cols)))
+        return self._jnp.asarray(x, self._jnp.float32)
+
+    def _device_x(self, x: np.ndarray, pad_cols: int = 0):
+        """Device copy of the RHS operand, LRU-cached.
+
+        The keying trades per-chunk cost against soundness:
+
+        * small operands (≤ ``_X_HASH_CAP`` bytes) are CONTENT-keyed —
+          cheap, and in-place mutation between rounds (gradient descent's
+          ``w -= ...`` on the same array object) can never serve a stale
+          device copy;
+        * a larger block would pay O(d·B) per chunk to content-key, so a
+          read-only array (the engine marks every round snapshot
+          immutable) is keyed by IDENTITY instead.  Sound because the
+          entry carries a weakref to the exact array object: while the
+          array is alive its id cannot be reused (and immutability rules
+          out content drift under the same id), and once it dies the
+          dead weakref unmasks any id-reusing impostor — the entry is
+          dropped and re-uploaded instead of served stale.  A weakref,
+          not a strong anchor, so the cache never pins dead rounds'
+          large host snapshots in memory;
+        * a large *writeable* array has no sound O(1) key (hashing a
+          capped prefix would miss mutations past the cap), so it
+          bypasses the cache entirely: always a fresh upload, never a
+          stale hit.
+        """
+        if x.nbytes <= self._X_HASH_CAP:
+            key: Tuple = ("by", x.shape, x.dtype.str, pad_cols, x.tobytes())
+            anchor = None
+        elif not x.flags.writeable:
+            key = ("ro", id(x), x.shape, x.dtype.str, pad_cols)
+            anchor = weakref.ref(x)
+        else:
+            with self._lock:
+                self._x_misses += 1
+            return self._upload_x(x, pad_cols)
         with self._lock:
-            dev = self._x_cache.get(key)
-            if dev is not None:
-                self._x_cache.move_to_end(key)
-                self._x_hits += 1
-                return dev
+            hit = self._x_cache.get(key)
+            if hit is not None:
+                ref = hit[0]
+                if ref is None or ref() is not None:
+                    self._x_cache.move_to_end(key)
+                    self._x_hits += 1
+                    return hit[1]
+                # anchored array died: this id may now belong to a
+                # different array — drop the stale entry, treat as a miss
+                del self._x_cache[key]
             self._x_misses += 1
-        dev = self._jnp.asarray(x, self._jnp.float32)
+        dev = self._upload_x(x, pad_cols)
         with self._lock:
-            self._x_cache[key] = dev
+            self._x_cache[key] = (anchor, dev)
             while len(self._x_cache) > self._X_CACHE_CAP:
                 self._x_cache.popitem(last=False)
         return dev
@@ -236,9 +298,19 @@ class KernelBackend:
         if bucket != rows:
             a_rows = jnp.pad(a_rows, ((0, bucket - rows), (0, 0)))
         ids = jnp.zeros((1,), jnp.int32)
-        out = ops.coded_matvec(a_rows, self._device_x(x), ids, bucket,
+        if x.ndim == 1:
+            out = ops.coded_matvec(a_rows, self._device_x(x), ids, bucket,
+                                   interpret=self.interpret)
+            return np.asarray(out[0][:rows], dtype=np.float64)
+        # multi-RHS chunk: bucket the batch width to the next power of two
+        # (floor 1) so coalesced rounds of heterogeneous widths land on a
+        # few traced shapes; zero columns cost nothing and are sliced off
+        b = x.shape[1]
+        b_bucket = _next_pow2(b, 1)
+        xd = self._device_x(x, pad_cols=b_bucket - b)
+        out = ops.coded_matvec(a_rows, xd, ids, bucket,
                                interpret=self.interpret)
-        return np.asarray(out[0][:rows], dtype=np.float64)
+        return np.asarray(out[0][:rows, :b], dtype=np.float64)
 
     def drop_shard(self, worker_id: int, shard_id: str) -> None:
         with self._lock:
@@ -511,7 +583,9 @@ class Worker(threading.Thread):
                 f"{type(exc).__name__}: {exc}", t_start=tp.t_start))
             self._drop_everything()
             return
-        target = (r1 - r0) * task.row_cost / s
+        # a B-wide chunk is B× the work: stretch its virtual time to match,
+        # or injected slowdowns would under-throttle batched rounds
+        target = (r1 - r0) * rhs_width(task.x) * task.row_cost / s
         elapsed = time.perf_counter() - t0
         if target > elapsed:
             time.sleep(target - elapsed)

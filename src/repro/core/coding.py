@@ -184,6 +184,13 @@ class MDSCode:
     tables (keyed by the whole (chunks, k) responder pattern) live in
     thread-safe LRU caches.  Misses are solved in one batched
     ``np.linalg.solve`` per call instead of a Python loop of inversions.
+
+    The weights are RHS-width agnostic by construction: a coverage
+    pattern's (chunks, k, k) decode table depends only on WHICH workers
+    responded, so multi-RHS rounds apply one cached table to all B
+    columns of their ``(chunks, k, rpc·B)`` gathered partials in a single
+    contraction — the per-round decode cost amortizes ~B× across a
+    batched round's requests (see ``CodedData.decode_compact``).
     """
 
     n: int

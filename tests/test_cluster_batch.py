@@ -1,0 +1,530 @@
+"""Multi-RHS batched rounds + request coalescing (PR 4).
+
+Covers the tentpole and satellites:
+
+* engine-level ``matmul`` correctness — an ``(d, B)`` round decodes to
+  ``A @ X`` and ``matvec`` stays the strictly-1-D special case;
+* **bit-identity**: with the parity workers fail-stopped, coverage is
+  pinned to the k systematic survivors, whose shards are exact copies of
+  the data blocks and whose decode submatrix is exactly the identity — so
+  with integer-valued operands every arithmetic step is exact and a
+  batched round must reproduce B sequential matvec rounds bit-for-bit;
+* batching × §4.3 waves × stealing interleave on a straggler-hit pool;
+* the RHS-width virtual-time stretch (a B-wide chunk pays B× the
+  injected slowdown);
+* ``steal_sizing="speed"`` config plumbing and behavior;
+* :class:`KernelBackend` multi-RHS compute and the re-keyed x-cache
+  (content key ≤ 64 KiB, identity key for large immutable blocks, bypass
+  for large writeable arrays) with hit/miss parity against the old
+  content-keyed LRU behavior;
+* coalescer admission: ``max_batch`` cap, incompatible requests never
+  merge, per-job futures resolve independently when a merged round fails.
+"""
+
+import queue
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.cluster import (ClusterConfig, CodedExecutionEngine,
+                           FailStopInjector, JobService, MatvecJob,
+                           NoSlowdown, PageRankJob, TraceInjector, Worker)
+from repro.cluster.worker import ChunkDone, ChunkTask, rhs_width
+from repro.core.strategies import GeneralS2C2, MDSCoded
+
+RNG = np.random.default_rng(41)
+
+
+def make_engine(n, k, injector, row_cost=2e-4, **kw):
+    return CodedExecutionEngine(
+        ClusterConfig(n_workers=n, k=k, row_cost=row_cost, **kw),
+        injector=injector)
+
+
+def int_mat(shape):
+    """Integer-valued float64 operands: all products/sums exact in f64."""
+    return RNG.integers(-3, 4, shape).astype(np.float64)
+
+
+class TestBatchedRounds:
+    N, K, C, D = 8, 6, 8, 240
+
+    def test_matmul_decodes_to_reference(self):
+        a = RNG.standard_normal((self.D, 24))
+        x_blk = RNG.standard_normal((24, 5))
+        eng = make_engine(self.N, self.K, NoSlowdown(), row_cost=1e-5)
+        try:
+            data = eng.load_matrix(a, chunks=self.C)
+            out = eng.matmul(data, x_blk,
+                             GeneralS2C2(self.N, self.K, self.D,
+                                         chunks=self.C))
+            assert out.y.shape == (self.D, 5)
+            assert out.metrics.rhs_width == 5
+            np.testing.assert_allclose(out.y, a @ x_blk, rtol=1e-9,
+                                       atol=1e-9)
+        finally:
+            eng.shutdown()
+
+    def test_matvec_is_strictly_1d_and_matmul_strictly_2d(self):
+        a = RNG.standard_normal((self.D, 8))
+        eng = make_engine(self.N, self.K, NoSlowdown(), row_cost=1e-6)
+        try:
+            data = eng.load_matrix(a, chunks=self.C)
+            strat = GeneralS2C2(self.N, self.K, self.D, chunks=self.C)
+            with pytest.raises(ValueError, match="matvec_async needs a 1-D"):
+                eng.matvec(data, np.ones((8, 2)), strat)
+            with pytest.raises(ValueError, match="matmul_async needs a"):
+                eng.matmul(data, np.ones(8), strat)
+        finally:
+            eng.shutdown()
+
+    def test_batched_bit_identical_to_sequential_under_forced_coverage(self):
+        """Parity workers dead from iteration 0 ⇒ coverage pinned to the
+        systematic k, decode weights exactly the identity; with integer
+        operands every step is exact, so GEMM and GEMV rounds must agree
+        bit-for-bit."""
+        B = 6
+        a = int_mat((self.D, 24))
+        eng = make_engine(self.N, self.K,
+                          FailStopInjector({w: 0 for w in
+                                            range(self.K, self.N)}),
+                          row_cost=2e-5)
+        try:
+            data = eng.load_matrix(a, chunks=self.C)
+            strat = MDSCoded(self.N, self.K, self.D)
+            xs = [int_mat(24) for _ in range(B)]
+            seq = [eng.matvec(data, x, strat).y for x in xs]
+            out = eng.matmul(data, np.stack(xs, axis=1), strat)
+            for b in range(B):
+                assert np.array_equal(out.y[:, b], seq[b]), f"column {b}"
+            assert np.array_equal(out.y, a @ np.stack(xs, axis=1))
+        finally:
+            eng.shutdown()
+
+    def test_batched_waves_and_steals_interleave(self):
+        """A batched round on a straggler-hit pool with a cold predictor:
+        §4.3 waves and steal passes fire against (rows, B) chunks exactly
+        as they do against matvec chunks, and every decode stays exact."""
+        n, k, chunks, d = 8, 6, 10, 480
+        tr = np.ones((100, n))
+        tr[:, 0] = tr[:, 1] = 0.05
+        a = RNG.standard_normal((d, 32))
+        x_blk = RNG.standard_normal((32, 4))
+        eng = make_engine(n, k, TraceInjector(tr))
+        try:
+            data = eng.load_matrix(a, chunks=chunks)
+            strat = GeneralS2C2(n, k, d, chunks=chunks)
+            steals = waves = 0
+            for _ in range(4):
+                out = eng.matmul(data, x_blk, strat)
+                np.testing.assert_allclose(out.y, a @ x_blk, rtol=1e-9,
+                                           atol=1e-9)
+                steals += out.metrics.steals
+                waves += out.metrics.reassign_waves
+            assert steals >= 1      # the steal path ran on batched chunks
+        finally:
+            eng.shutdown()
+
+    def test_replicated_path_is_width_generic(self):
+        """engine.matmul also works for UncodedReplication tenants (the
+        coalescer never routes them, but the substrate is width-generic)."""
+        from repro.cluster.data import replica_placement
+        from repro.core.strategies import UncodedReplication
+        n, d = 6, 180
+        a = RNG.standard_normal((d, 12))
+        x_blk = RNG.standard_normal((12, 3))
+        eng = make_engine(n, 4, NoSlowdown(), row_cost=1e-5)
+        try:
+            strat = UncodedReplication(n, d, seed=3)
+            data = eng.load_replicated(a, replica_placement(n, 3, seed=3))
+            out = eng.matmul(data, x_blk, strat)
+            assert out.metrics.rhs_width == 3
+            np.testing.assert_allclose(out.y, a @ x_blk, rtol=1e-9,
+                                       atol=1e-9)
+        finally:
+            eng.shutdown()
+
+    def test_virtual_time_scales_with_rhs_width(self):
+        """A B-wide chunk must be stretched to ~B× the matvec virtual
+        time — otherwise injectors under-throttle batched rounds."""
+        events = queue.Queue()
+        w = Worker(0, events, NoSlowdown())
+        w.install_shard("s", np.ones((8, 4)))
+        w.start()
+        try:
+            row_cost = 2.5e-3       # 8 rows ⇒ 20 ms at width 1
+            def run(x):
+                t0 = time.perf_counter()
+                w.submit(ChunkTask(round_id=1, iteration=0, shard_id="s",
+                                   chunks=[(0, 0, 8)], x=x,
+                                   row_cost=row_cost,
+                                   cancel=threading.Event()))
+                while True:
+                    ev = events.get(timeout=30)
+                    if isinstance(ev, ChunkDone):
+                        return time.perf_counter() - t0
+            t1 = run(np.ones(4))
+            t8 = run(np.ones((4, 8)))
+            assert rhs_width(np.ones((4, 8))) == 8
+            # 20 ms vs 160 ms nominal; generous margins for scheduler noise
+            assert t8 > 4 * t1, (t1, t8)
+        finally:
+            w.stop()
+            w.join(timeout=10)
+
+    def test_decode_compact_multi_rhs_matches_per_column(self):
+        """CodedData.decode_compact over a (C, k, rpc, B) gather equals the
+        per-column 3-D decode."""
+        from repro.cluster.data import CodedData
+        from repro.core.coding import MDSCode
+        n, k, chunks = 6, 4, 5
+        code = MDSCode(n, k)
+        a = RNG.standard_normal((200, 3))
+        data = CodedData.encode("t", a, code, chunks)
+        rpc, B = data.rows_per_chunk, 3
+        ids = np.stack([np.arange(c, c + k) % n for c in range(chunks)])
+        dms = code.decode_submats(ids)
+        y = RNG.standard_normal((chunks, k, rpc, B))
+        full = data.decode_compact(dms, y)
+        assert full.shape == (data.orig_rows, B)
+        for b in range(B):
+            col = data.decode_compact(dms, np.ascontiguousarray(y[..., b]))
+            np.testing.assert_allclose(full[:, b], col, rtol=1e-12,
+                                       atol=1e-12)
+
+
+class TestStealSizing:
+    def test_bad_steal_sizing_rejected(self):
+        with pytest.raises(ValueError, match="steal_sizing"):
+            ClusterConfig(n_workers=4, k=2, steal_sizing="bogus")
+
+    def test_speed_sizing_steals_and_decodes_exactly(self):
+        n, k, chunks, d = 8, 6, 12, 480
+        tr = np.ones((100, n))
+        tr[:, 0] = tr[:, 1] = 0.05
+        a = RNG.standard_normal((d, 32))
+        x = RNG.standard_normal(32)
+        eng = make_engine(n, k, TraceInjector(tr), steal_sizing="speed")
+        try:
+            data = eng.load_matrix(a, chunks=chunks)
+            strat = GeneralS2C2(n, k, d, chunks=chunks)
+            steals = 0
+            for _ in range(4):
+                out = eng.matvec(data, x, strat)
+                np.testing.assert_allclose(out.y, a @ x, rtol=1e-9,
+                                           atol=1e-9)
+                steals += out.metrics.steals
+            assert steals >= 1
+        finally:
+            eng.shutdown()
+
+
+class TestXCacheKeying:
+    """The re-keyed KernelBackend x-cache (satellite 2).
+
+    Parity contract with the old content-keyed LRU: for operands at or
+    under the 64 KiB hash cap the hit/miss behavior is IDENTICAL (content
+    keyed — repeats hit even across distinct array objects, in-place
+    mutation misses); above the cap, immutable arrays are identity-keyed
+    (O(1) per chunk instead of O(d·B)) and writeable arrays bypass the
+    cache rather than risk a stale hit.
+    """
+
+    def _backend(self):
+        from repro.cluster.worker import KernelBackend
+        return KernelBackend()
+
+    def test_small_operands_content_keyed_parity(self):
+        be = self._backend()
+        shard = RNG.standard_normal((16, 8))
+        x = RNG.standard_normal(8)
+        be.compute_chunk(0, "s", shard, 0, 8, x)
+        # same CONTENT, different object: hit (exactly the old LRU rule)
+        be.compute_chunk(0, "s", shard, 8, 16, x.copy())
+        info = be.cache_info()
+        assert (info["x_hits"], info["x_misses"]) == (1, 1)
+        # in-place mutation: new bytes, new key — never served stale
+        y_ref = shard[0:8] @ (x * 0 + 2.0)
+        x *= 0
+        x += 2.0
+        y = be.compute_chunk(0, "s", shard, 0, 8, x)
+        info = be.cache_info()
+        assert info["x_misses"] == 2
+        np.testing.assert_allclose(y, y_ref, rtol=1e-4, atol=1e-4)
+
+    def test_large_readonly_identity_keyed(self):
+        be = self._backend()
+        shard = RNG.standard_normal((16, 8))
+        big = RNG.standard_normal((8, 1100))     # 70400 B > 64 KiB
+        big.setflags(write=False)
+        be.compute_chunk(0, "s", shard, 0, 8, big)
+        be.compute_chunk(0, "s", shard, 8, 16, big)
+        info = be.cache_info()
+        assert (info["x_hits"], info["x_misses"]) == (1, 1)
+        # an equal-content but DISTINCT immutable array is a different key
+        # (identity keying trades that rare hit for O(1) lookups)
+        big2 = np.array(big)
+        big2.setflags(write=False)
+        be.compute_chunk(0, "s", shard, 0, 8, big2)
+        assert be.cache_info()["x_misses"] == 2
+
+    def test_dead_identity_anchor_is_dropped_not_served(self):
+        """The identity key is a weakref: once the anchored snapshot dies,
+        an id-reusing impostor must get a fresh upload, never the dead
+        entry's device copy (and the cache must not pin the host array)."""
+        import gc
+        import weakref
+        be = self._backend()
+        shard = RNG.standard_normal((16, 8))
+        big = RNG.standard_normal((8, 1100))
+        big.setflags(write=False)
+        be.compute_chunk(0, "s", shard, 0, 8, big)
+        key = next(k for k in be._x_cache if k[0] == "ro")
+        # simulate the anchored array dying (possibly with its id reused):
+        # swap in a dead weakref, as if `big` had been collected
+        tmp = np.arange(3.0)
+        dead = weakref.ref(tmp)
+        del tmp
+        gc.collect()
+        assert dead() is None
+        with be._lock:
+            be._x_cache[key] = (dead, be._x_cache[key][1])
+        y = be.compute_chunk(0, "s", shard, 0, 8, big)   # same id, dead ref
+        info = be.cache_info()
+        assert info["x_misses"] == 2        # stale entry dropped, re-uploaded
+        np.testing.assert_allclose(y, shard[0:8] @ big, rtol=1e-3, atol=1e-3)
+
+    def test_large_writeable_bypasses_but_stays_fresh(self):
+        be = self._backend()
+        shard = RNG.standard_normal((16, 8))
+        big = np.ones((8, 1100))
+        y1 = be.compute_chunk(0, "s", shard, 0, 8, big)
+        big[:] = 2.0
+        y2 = be.compute_chunk(0, "s", shard, 0, 8, big)
+        info = be.cache_info()
+        assert info["x_entries"] == 0            # never cached
+        assert info["x_misses"] == 2
+        np.testing.assert_allclose(y2, 2 * y1, rtol=1e-4, atol=1e-4)
+
+    def test_engine_snapshots_are_immutable(self):
+        """The engine marks round snapshots read-only (what makes the
+        identity key sound for shard-aware backends)."""
+        seen = []
+
+        class Probe:
+            def compute_chunk(self, worker_id, shard_id, shard, r0, r1, x):
+                seen.append(bool(x.flags.writeable))
+                return shard[r0:r1] @ x
+
+        eng = CodedExecutionEngine(
+            ClusterConfig(n_workers=4, k=3, row_cost=1e-6),
+            injector=NoSlowdown(), compute=Probe())
+        try:
+            a = RNG.standard_normal((60, 6))
+            data = eng.load_matrix(a, chunks=5)
+            eng.matvec(data, np.ones(6), GeneralS2C2(4, 3, 60, chunks=5))
+            eng.matmul(data, np.ones((6, 2)), GeneralS2C2(4, 3, 60, chunks=5))
+            assert seen and not any(seen)
+        finally:
+            eng.shutdown()
+
+
+class TestCoalescer:
+    N, K, C, D = 8, 6, 8, 240
+
+    def _service(self, coalesce=True, max_batch=8, hold_s=0.05,
+                 inflight=4, injector=None, row_cost=2e-4):
+        eng = make_engine(self.N, self.K, injector or NoSlowdown(),
+                          row_cost=row_cost)
+        svc = JobService(eng, max_inflight=inflight, coalesce=coalesce,
+                         max_batch=max_batch, coalesce_hold_s=hold_s)
+        return eng, svc
+
+    def test_compatible_jobs_merge_and_outputs_fan_out(self):
+        eng, svc = self._service()
+        try:
+            a = RNG.standard_normal((self.D, 24))
+            shared = svc.share_matrix(a, chunks=self.C)
+            jobs = [MatvecJob(a, [RNG.standard_normal(24) for _ in range(3)],
+                              GeneralS2C2(self.N, self.K, self.D,
+                                          chunks=self.C),
+                              chunks=self.C, data=shared)
+                    for _ in range(4)]
+            handles = [svc.submit(j) for j in jobs]
+            svc.drain(timeout=120)
+            assert not [m.error for m in svc.completed if m.error]
+            for j, h in zip(jobs, handles):
+                for i, x in enumerate(j.xs):
+                    np.testing.assert_allclose(h.output[i], a @ x,
+                                               rtol=1e-9, atol=1e-9)
+            assert svc.coalescer.merged_rounds >= 1
+            rep = svc.report()
+            assert rep.coalesced_requests >= 2
+            assert rep.batched_rounds >= 1
+        finally:
+            svc.close()
+            eng.shutdown()
+
+    def test_iterative_jobs_recoalesce_each_iteration(self):
+        """PageRank tenants on one shared graph merge anew every power
+        iteration (their x vectors differ — that is the point)."""
+        eng, svc = self._service(hold_s=0.05)
+        try:
+            m = RNG.random((self.D, self.D))
+            m /= m.sum(0, keepdims=True)
+            shared = svc.share_matrix(m, chunks=self.C)
+            jobs = [PageRankJob(m, GeneralS2C2(self.N, self.K, self.D,
+                                               chunks=self.C),
+                                iters=4, chunks=self.C, data=shared)
+                    for _ in range(3)]
+            handles = [svc.submit(j) for j in jobs]
+            svc.drain(timeout=120)
+            assert not [m_.error for m_ in svc.completed if m_.error]
+            # ground truth: same damped power iteration, computed locally
+            r = np.ones(self.D) / self.D
+            for _ in range(4):
+                r = 0.15 / self.D + 0.85 * (m @ r)
+            for h in handles:
+                np.testing.assert_allclose(h.output, r, rtol=1e-8,
+                                           atol=1e-8)
+            assert svc.coalescer.merged_rounds >= 2
+        finally:
+            svc.close()
+            eng.shutdown()
+
+    def test_max_batch_cap(self):
+        eng, svc = self._service(max_batch=2, hold_s=0.1, inflight=6)
+        try:
+            a = RNG.standard_normal((self.D, 16))
+            shared = svc.share_matrix(a, chunks=self.C)
+            jobs = [MatvecJob(a, [RNG.standard_normal(16)],
+                              GeneralS2C2(self.N, self.K, self.D,
+                                          chunks=self.C),
+                              chunks=self.C, data=shared)
+                    for _ in range(6)]
+            handles = [svc.submit(j) for j in jobs]
+            svc.drain(timeout=120)
+            assert not [m.error for m in svc.completed if m.error]
+            for j, h in zip(jobs, handles):
+                np.testing.assert_allclose(h.output[0], a @ j.xs[0],
+                                           rtol=1e-9, atol=1e-9)
+            widths = [r.rhs_width for m in svc.completed for r in m.rounds]
+            assert max(widths) <= 2            # the cap held
+        finally:
+            svc.close()
+            eng.shutdown()
+
+    def test_incompatible_requests_never_merge(self):
+        """Different shared matrices and different strategy parameters are
+        distinct admission keys: nothing merges even under a long hold."""
+        eng, svc = self._service(hold_s=0.05, inflight=4)
+        try:
+            a = RNG.standard_normal((self.D, 16))
+            b = RNG.standard_normal((self.D, 16))
+            sa = svc.share_matrix(a, chunks=self.C)
+            sb = svc.share_matrix(b, chunks=self.C)
+            jobs = [
+                # same matrix, different timeout_slack ⇒ incompatible
+                MatvecJob(a, [RNG.standard_normal(16)],
+                          GeneralS2C2(self.N, self.K, self.D, chunks=self.C,
+                                      timeout_slack=0.15),
+                          chunks=self.C, data=sa),
+                MatvecJob(a, [RNG.standard_normal(16)],
+                          GeneralS2C2(self.N, self.K, self.D, chunks=self.C,
+                                      timeout_slack=0.40),
+                          chunks=self.C, data=sa),
+                # different matrix ⇒ incompatible with both
+                MatvecJob(b, [RNG.standard_normal(16)],
+                          GeneralS2C2(self.N, self.K, self.D, chunks=self.C,
+                                      timeout_slack=0.15),
+                          chunks=self.C, data=sb),
+            ]
+            handles = [svc.submit(j) for j in jobs]
+            svc.drain(timeout=120)
+            assert not [m.error for m in svc.completed if m.error]
+            mats = [a, a, b]
+            for j, h, m_ in zip(jobs, handles, mats):
+                np.testing.assert_allclose(h.output[0], m_ @ j.xs[0],
+                                           rtol=1e-9, atol=1e-9)
+            assert svc.coalescer.merged_rounds == 0
+            assert all(r.coalesced == 1
+                       for m in svc.completed for r in m.rounds)
+        finally:
+            svc.close()
+            eng.shutdown()
+
+    def test_merged_round_failure_isolated_per_job(self):
+        """Two compatible jobs merge into a round that fails (strategy
+        chunk count mismatches the data): each records its OWN error, and
+        an unrelated job on another shared matrix is untouched."""
+        eng, svc = self._service(hold_s=0.2, inflight=3)
+        try:
+            a = RNG.standard_normal((self.D, 16))
+            b = RNG.standard_normal((self.D, 16))
+            sa = svc.share_matrix(a, chunks=self.C)
+            sb = svc.share_matrix(b, chunks=self.C)
+            bad = GeneralS2C2(self.N, self.K, self.D, chunks=self.C + 1)
+            bad_jobs = [MatvecJob(a, [RNG.standard_normal(16)], bad,
+                                  chunks=self.C, data=sa)
+                        for _ in range(2)]
+            good = MatvecJob(b, [RNG.standard_normal(16)],
+                             GeneralS2C2(self.N, self.K, self.D,
+                                         chunks=self.C),
+                             chunks=self.C, data=sb)
+            handles = [svc.submit(j) for j in bad_jobs + [good]]
+            svc.drain(timeout=120)
+            by_id = {m.job_id: m for m in svc.completed}
+            bad_errs = [by_id[h.metrics.job_id].error
+                        for h in handles[:2]]
+            assert all(e and "chunks" in e for e in bad_errs), bad_errs
+            assert by_id[handles[2].metrics.job_id].error is None
+            np.testing.assert_allclose(handles[2].output[0],
+                                       b @ good.xs[0], rtol=1e-9, atol=1e-9)
+        finally:
+            svc.close()
+            eng.shutdown()
+
+    def test_private_data_jobs_bypass_coalescer(self):
+        """Jobs with per-job data never pay the hold and never merge —
+        the PR-3 service path, byte for byte."""
+        eng, svc = self._service(hold_s=0.5)
+        try:
+            a = RNG.standard_normal((self.D, 16))
+            job = MatvecJob(a, [RNG.standard_normal(16)],
+                            GeneralS2C2(self.N, self.K, self.D,
+                                        chunks=self.C), chunks=self.C)
+            t0 = time.perf_counter()
+            h = svc.submit(job)
+            svc.drain(timeout=120)
+            wall = time.perf_counter() - t0
+            np.testing.assert_allclose(h.output[0], a @ job.xs[0],
+                                       rtol=1e-9, atol=1e-9)
+            assert svc.coalescer.merged_rounds == 0
+            assert wall < 0.5      # did not sit in the 0.5 s hold window
+        finally:
+            svc.close()
+            eng.shutdown()
+
+    def test_matvec_job_self_batching(self):
+        """MatvecJob(batch=B) groups its own vectors into multi-RHS rounds."""
+        eng, svc = self._service(coalesce=False)
+        try:
+            a = RNG.standard_normal((self.D, 16))
+            xs = [RNG.standard_normal(16) for _ in range(5)]
+            job = MatvecJob(a, xs,
+                            GeneralS2C2(self.N, self.K, self.D,
+                                        chunks=self.C),
+                            chunks=self.C, batch=4)
+            h = svc.submit(job)
+            svc.drain(timeout=120)
+            assert not [m.error for m in svc.completed if m.error]
+            for i, x in enumerate(xs):
+                np.testing.assert_allclose(h.output[i], a @ x,
+                                           rtol=1e-9, atol=1e-9)
+            m = svc.completed[0]
+            assert [r.rhs_width for r in m.rounds] == [4, 1]
+        finally:
+            svc.close()
+            eng.shutdown()
