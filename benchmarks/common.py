@@ -18,6 +18,10 @@ from repro.core.simulation import (CLOUD_CLUSTER, LOCAL_CLUSTER, CostModel,
 
 _ROW_COST = None
 
+#: optional path for a Chrome trace artifact (set by ``run.py --trace-out``);
+#: fig modules that run a traced workload dump their tracer here
+TRACE_OUT = None
+
 
 def calibrated_local() -> CostModel:
     """LOCAL_CLUSTER with the row cost measured on this host."""

@@ -44,7 +44,13 @@ def main() -> int:
                     help="comma-separated module tags/names to run")
     ap.add_argument("--bench-out", default=str(BENCH_PATH),
                     help="where to write the JSON perf baseline")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome trace-event JSON (Perfetto-"
+                         "loadable) from one traced benchmark run")
     args = ap.parse_args()
+    if args.trace_out:
+        import benchmarks.common
+        benchmarks.common.TRACE_OUT = args.trace_out
     only = set(args.only.split(",")) if args.only else None
     csv = Csv()
     print("name,us_per_call,derived")

@@ -9,13 +9,17 @@ multi-tenant JobService — with concurrent tenants coalescing onto a
 shared matrix — and prints the service report.
 
 Run:  PYTHONPATH=src python examples/cluster_demo.py
+      PYTHONPATH=src python examples/cluster_demo.py --trace-out demo.json
+      # then load demo.json in https://ui.perfetto.dev
 """
+
+import argparse
 
 import numpy as np
 
 from repro.cluster import (ClusterConfig, CodedExecutionEngine, JobService,
                            MatvecJob, PageRankJob, RegressionJob,
-                           TraceInjector)
+                           TraceInjector, Tracer)
 from repro.core.strategies import GeneralS2C2, MDSCoded
 from repro.core.traces import controlled_traces
 
@@ -33,11 +37,17 @@ def make_stochastic(n: int, seed: int = 1) -> np.ndarray:
 
 
 def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace-out", default=None,
+                    help="export the whole demo as Chrome trace-event JSON "
+                         "(load in Perfetto / chrome://tracing)")
+    args = ap.parse_args()
     m = make_stochastic(D)
     traces = controlled_traces(N_WORKERS, 60, n_stragglers=2, seed=7)
     eng = CodedExecutionEngine(
         ClusterConfig(n_workers=N_WORKERS, k=K, row_cost=5e-5),
-        injector=TraceInjector(traces))
+        injector=TraceInjector(traces),
+        tracer=Tracer() if args.trace_out else None)
     try:
         data = eng.load_matrix(m, chunks=CHUNKS)
         r_ref = np.ones(D) / D
@@ -113,6 +123,10 @@ def main() -> int:
             svc.close()
     finally:
         eng.shutdown()
+    if args.trace_out:
+        n_events = eng.dump_trace(args.trace_out)
+        print(f"\nwrote {args.trace_out} ({n_events} trace events) — "
+              "load it in https://ui.perfetto.dev")
     print("OK")
     return 0
 

@@ -36,10 +36,13 @@ Quickstart::
 from repro.cluster.data import CodedData, ReplicatedData, replica_placement
 from repro.cluster.injectors import (BurstyInjector, FailStopInjector,
                                      NoSlowdown, SlowdownInjector,
-                                     TraceInjector)
+                                     TracedInjector, TraceInjector)
 from repro.cluster.master import (ClusterConfig, CodedExecutionEngine,
                                   RoundHandle, RoundOutput)
 from repro.cluster.metrics import JobMetrics, RoundMetrics, ServiceReport
+from repro.cluster.obs import (Counter, Gauge, Histogram, MetricsRegistry,
+                               TraceRecord, Tracer, chrome_trace_events,
+                               configure_logging, export_chrome_trace)
 from repro.cluster.service import (JobService, MatvecJob, PageRankJob,
                                    RegressionJob, RoundCoalescer,
                                    ServiceSaturated)
@@ -48,7 +51,7 @@ from repro.cluster.worker import (ChunkDone, KernelBackend, Worker,
 
 __all__ = [
     "BurstyInjector", "FailStopInjector", "NoSlowdown", "SlowdownInjector",
-    "TraceInjector",
+    "TraceInjector", "TracedInjector",
     "ChunkDone", "KernelBackend", "Worker", "WorkerDone", "WorkerFailed",
     "kernel_backend",
     "CodedData", "ReplicatedData", "replica_placement",
@@ -56,4 +59,7 @@ __all__ = [
     "RoundMetrics", "JobMetrics", "ServiceReport",
     "JobService", "MatvecJob", "PageRankJob", "RegressionJob",
     "RoundCoalescer", "ServiceSaturated",
+    "Tracer", "TraceRecord", "MetricsRegistry",
+    "Counter", "Gauge", "Histogram",
+    "chrome_trace_events", "export_chrome_trace", "configure_logging",
 ]

@@ -25,8 +25,10 @@ from typing import Dict, Mapping, Optional, Protocol
 
 import numpy as np
 
+from repro.cluster import obs
+
 __all__ = ["SlowdownInjector", "NoSlowdown", "TraceInjector",
-           "BurstyInjector", "FailStopInjector"]
+           "BurstyInjector", "FailStopInjector", "TracedInjector"]
 
 
 class SlowdownInjector(Protocol):
@@ -114,3 +116,35 @@ class FailStopInjector:
         if die is not None and iteration >= die:
             return 0.0
         return self.inner.speed(worker, iteration)
+
+
+class TracedInjector:
+    """Annotate the trace with the *injected* speed of every worker.
+
+    Wraps any injector; each time a worker samples its speed the wrapper
+    emits an ``inj_speed`` record (rendered as a per-worker counter track
+    in the Chrome trace, next to the master's ``obs_speed`` measurements),
+    so an injected-vs-observed slowdown mismatch — the predictor
+    mispredicting a straggler — is visually attributable on the timeline.
+    Emission is deduplicated per worker (only speed *changes* are
+    recorded) and skipped entirely while the tracer is disabled, so the
+    wrapper adds one dict lookup per chunk when idle.
+    """
+
+    def __init__(self, inner: SlowdownInjector, tracer: "obs.Tracer"):
+        self.inner = inner
+        self.tracer = tracer
+        self._last: Dict[int, float] = {}
+        self._lock = threading.Lock()
+
+    def speed(self, worker: int, iteration: int) -> float:
+        s = self.inner.speed(worker, iteration)
+        if self.tracer.enabled:
+            with self._lock:
+                changed = self._last.get(worker) != s
+                if changed:
+                    self._last[worker] = s
+            if changed:
+                self.tracer.emit(obs.KIND_INJ_SPEED, worker=worker,
+                                 speed=s, iteration=iteration)
+        return s

@@ -70,9 +70,11 @@ from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
+from repro.cluster import obs
 from repro.cluster.data import CodedData, ReplicatedData
-from repro.cluster.injectors import SlowdownInjector
+from repro.cluster.injectors import SlowdownInjector, TracedInjector
 from repro.cluster.metrics import RoundMetrics
+from repro.cluster.obs import MetricsRegistry, Tracer
 from repro.cluster.worker import (ChunkDone, ChunkTask, ComputeFn, Worker,
                                   WorkerDone, WorkerFailed, numpy_backend,
                                   rhs_width)
@@ -86,7 +88,7 @@ from repro.runtime.elastic import FailureDetector
 __all__ = ["ClusterConfig", "CodedExecutionEngine", "RoundOutput",
            "RoundHandle"]
 
-logger = logging.getLogger("repro.cluster")
+logger = logging.getLogger("repro.cluster.master")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -196,10 +198,24 @@ class CodedExecutionEngine:
 
     def __init__(self, cfg: ClusterConfig, injector: SlowdownInjector,
                  compute: ComputeFn = numpy_backend,
-                 predictor: Optional[SpeedPredictor] = None):
+                 predictor: Optional[SpeedPredictor] = None,
+                 tracer: Optional[Tracer] = None,
+                 registry: Optional[MetricsRegistry] = None):
         self.cfg = cfg
+        # observability plane: pass a Tracer to capture the chunk lifecycle
+        # (or toggle engine.tracer.enable() later — the default tracer is
+        # created disabled, so an untraced engine pays one attribute check
+        # per would-be record).  The metrics registry is always on: it is
+        # fed at round/job granularity, never on the per-chunk hot path.
+        self.tracer = tracer if tracer is not None else Tracer(enabled=False)
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self._declare_metrics()
+        # the injected speed annotates the trace next to the observed speed
+        # (TracedInjector dedups per worker and no-ops while disabled)
+        injector = TracedInjector(injector, self.tracer)
         self.events: "queue.Queue" = queue.Queue()
-        self.workers = [Worker(w, self.events, injector, compute)
+        self.workers = [Worker(w, self.events, injector, compute,
+                               tracer=self.tracer)
                         for w in range(cfg.n_workers)]
         for w in self.workers:
             w.start()
@@ -227,6 +243,82 @@ class CodedExecutionEngine:
                                            name="event-collector",
                                            daemon=True)
         self._collector.start()
+
+    # ------------------------------------------------------------------
+    # observability
+    # ------------------------------------------------------------------
+
+    def _declare_metrics(self) -> None:
+        """Register the engine's metric families (idempotent per registry)."""
+        reg = self.registry
+        self._m_rounds = reg.counter(
+            "s2c2_rounds_total", "engine rounds completed", ("strategy",))
+        self._m_chunks = reg.counter(
+            "s2c2_chunks_done_total", "chunk completions", ("worker",))
+        self._m_steals = reg.counter(
+            "s2c2_steals_total", "successful idle-triggered steal passes")
+        self._m_retracted = reg.counter(
+            "s2c2_chunks_retracted_total",
+            "chunks retracted from donor queues and re-dispatched")
+        self._m_waves = reg.counter(
+            "s2c2_reassign_waves_total", "§4.3 reassignment waves fired")
+        self._m_failures = reg.counter(
+            "s2c2_worker_failures_total", "worker backend crash reports")
+        self._m_useful = reg.counter(
+            "s2c2_useful_rows_total",
+            "row-equivalents used in decodes", ("strategy",))
+        self._m_wasted = reg.counter(
+            "s2c2_wasted_rows_total",
+            "row-equivalents computed but unused", ("strategy",))
+        self._m_makespan = reg.histogram(
+            "s2c2_round_makespan_seconds", "round wall time (dispatch "
+            "to decoded)", ("strategy",))
+        self._m_decode = reg.histogram(
+            "s2c2_round_decode_seconds", "round decode time")
+        self._m_inflight = reg.gauge(
+            "s2c2_inflight_rounds", "rounds currently in flight")
+        self._m_dead = reg.gauge(
+            "s2c2_workers_dead", "workers declared dead (crash or §4.4)")
+        self._m_batched = reg.counter(
+            "s2c2_batched_rounds_total", "rounds executed with RHS "
+            "width > 1")
+
+    def _publish_round(self, m: RoundMetrics,
+                       chunk_counts: Optional[np.ndarray] = None) -> None:
+        """Fold one finished round into the registry (round granularity:
+        one labeled increment per counter, never per chunk)."""
+        self._m_rounds.labels(strategy=m.strategy).inc()
+        self._m_makespan.labels(strategy=m.strategy).observe(m.makespan)
+        self._m_decode.observe(m.decode_time)
+        self._m_useful.labels(strategy=m.strategy).inc(m.total_useful)
+        self._m_wasted.labels(strategy=m.strategy).inc(m.total_wasted)
+        if m.steals:
+            self._m_steals.inc(m.steals)
+        if m.retracted_chunks:
+            self._m_retracted.inc(m.retracted_chunks)
+        if m.reassign_waves:
+            self._m_waves.inc(m.reassign_waves)
+        if m.worker_failures:
+            self._m_failures.inc(len(m.worker_failures))
+        if m.rhs_width > 1:
+            self._m_batched.inc()
+        if chunk_counts is not None:
+            for w, c in enumerate(chunk_counts):
+                if c > 0:
+                    self._m_chunks.labels(worker=w).inc(float(c))
+
+    def dump_trace(self, path) -> int:
+        """Export the buffered trace as Chrome trace-event JSON.
+
+        Load the file in Perfetto (https://ui.perfetto.dev) or
+        ``chrome://tracing``: workers render as processes with chunk
+        execution spans and queue (enqueue/retract) instants, the master
+        renders one lane per round with plan/dispatch/collect/decode
+        spans plus §4.3 wave / steal / failover / coalesce instants, and
+        injected-vs-observed speeds render as counter tracks.  Returns
+        the number of exported events.
+        """
+        return self.tracer.dump(path)
 
     # ------------------------------------------------------------------
     # event routing (the pipelining substrate)
@@ -277,11 +369,14 @@ class CodedExecutionEngine:
         with self._rounds_lock:
             self._rounds[rid] = inbox
             inflight = len(self._rounds)
+        self._m_inflight.set(inflight)
         return rid, inbox, inflight
 
     def _retire_round(self, rid: int) -> None:
         with self._rounds_lock:
             self._rounds.pop(rid, None)
+            inflight = len(self._rounds)
+        self._m_inflight.set(inflight)
 
     def inflight_rounds(self) -> int:
         with self._rounds_lock:
@@ -382,8 +477,17 @@ class CodedExecutionEngine:
             self.predictor.observe(filled)
             heartbeat = np.where(np.isfinite(response), 1.0, np.inf)
             verdict = self.detector.evaluate(heartbeat)
+            new_dead = verdict["dead"] - self.dead
             self.dead |= verdict["dead"]
             self.iteration += 1
+            n_dead = len(self.dead)
+        if new_dead:
+            logger.info("§4.4 fail-stop verdict: workers %s declared dead",
+                        sorted(new_dead))
+            if self.tracer.enabled:
+                for w in sorted(new_dead):
+                    self.tracer.emit(obs.KIND_FAILSTOP_VERDICT, worker=w)
+        self._m_dead.set(n_dead)
 
     # ------------------------------------------------------------------
     # public entry: matvec rounds under a strategy
@@ -520,8 +624,13 @@ class CodedExecutionEngine:
             x=x, row_cost=self.cfg.row_cost, cancel=threading.Event())
         state.tasks[worker] = task
         state.finish_t[worker] = np.inf
-        state.dispatch_t[worker] = time.perf_counter()
+        now = time.perf_counter()
+        state.dispatch_t[worker] = now
         state.start_t[worker] = np.nan
+        if self.tracer.enabled:
+            for c in chunk_ids:
+                self.tracer.emit(obs.KIND_ENQUEUE, worker=worker,
+                                 round_id=rid, chunk_id=c, t=now)
         self.workers[worker].submit(task)
 
     def _run_coded(self, rid: int, inbox: "queue.Queue", inflight: int,
@@ -534,6 +643,7 @@ class CodedExecutionEngine:
         # the workers stretch B-wide chunks to B× the virtual time, so the
         # deadline clock, measured speeds, and row accounting must follow
         work_per_chunk = rpc * width * cfg.row_cost
+        t_plan0 = time.perf_counter()
         alloc, planned = self._plan(data, strategy, width)
         slack = getattr(strategy, "timeout_slack", cfg.timeout_slack)
         iteration = self.iteration      # snapshot: all dispatches this round
@@ -545,6 +655,7 @@ class CodedExecutionEngine:
                 ids = [int((alloc.begin[w] + j) % C)
                        for j in range(int(alloc.count[w]))]
                 self._dispatch(state, rid, iteration, data, x, w, ids)
+        t_disp = time.perf_counter()
 
         active = {w for w in range(n) if alloc.count[w] > 0}
         # MDSCoded is the conventional baseline: pure any-k collection, no
@@ -619,6 +730,11 @@ class CodedExecutionEngine:
                 # path; for MDSCoded only the generous liveness bound)
                 mispredicted = mispredicted or use_timeout
                 waves += 1
+                if self.tracer.enabled:
+                    self.tracer.emit(obs.KIND_WAVE, round_id=rid, wave=waves,
+                                     need=state.need)
+                logger.debug("round %d: §4.3 wave %d fired (need=%d)",
+                             rid, waves, state.need)
                 if waves > cfg.max_reassign_waves:
                     # final: wait out the starvation bound (the no-events
                     # check above trips it if nothing more arrives)
@@ -731,6 +847,18 @@ class CodedExecutionEngine:
                                 use_kernel=cfg.decode_with_kernel)
         t_done = time.perf_counter()
 
+        if self.tracer.enabled:
+            emit = self.tracer.emit
+            emit(obs.KIND_ROUND_PLAN, round_id=rid, t=t_plan0,
+                 dur=t0 - t_plan0, strategy=type(strategy).__name__)
+            emit(obs.KIND_ROUND_DISPATCH, round_id=rid, t=t0,
+                 dur=t_disp - t0)
+            emit(obs.KIND_ROUND_COLLECT, round_id=rid, t=t_disp,
+                 dur=t_collected - t_disp, waves=waves,
+                 steals=state.steals, retracted=state.retracted)
+            emit(obs.KIND_ROUND_DECODE, round_id=rid, t=t_collected,
+                 dur=t_done - t_collected)
+
         # measured speeds: rows · row_cost / response time (§6.2's l_i/t_i).
         # Only silent workers (zero events while allocated) count as
         # non-responders — slow-but-alive workers are the *normal* case the
@@ -773,6 +901,14 @@ class CodedExecutionEngine:
         finite = response[np.isfinite(response)]
         neutral = float(np.median(finite)) if finite.size else 0.0
         response = np.where(np.isnan(response), neutral, response)
+        if self.tracer.enabled:
+            # measured speeds render as counter tracks next to the
+            # injected ones (TracedInjector) — the misprediction gap
+            for w in range(n):
+                if np.isfinite(speeds[w]):
+                    self.tracer.emit(obs.KIND_OBS_SPEED, worker=w,
+                                     round_id=rid, t=t_done,
+                                     speed=float(speeds[w]))
         self._observe(speeds, response)
 
         # row accounting is in row-equivalents: a B-wide chunk is rpc·B
@@ -793,6 +929,7 @@ class CodedExecutionEngine:
             inflight=inflight, rhs_width=width,
             steals=state.steals, retracted_chunks=state.retracted,
             worker_failures=tuple(state.failures))
+        self._publish_round(metrics, state.chunks_done)
         return RoundOutput(y=y, metrics=metrics)
 
     def _reassign_wave(self, state: _RoundState, rid: int, iteration: int,
@@ -927,6 +1064,12 @@ class CodedExecutionEngine:
                 state.outstanding[wb].discard(c)
             state.retracted += len(taken)
             state.steals += 1
+            if self.tracer.enabled:
+                self.tracer.emit(obs.KIND_STEAL, worker=wi, round_id=rid,
+                                 donor=wb, n=len(taken),
+                                 chunks=tuple(taken))
+            logger.debug("round %d: worker %d stole chunks %s from "
+                         "worker %d", rid, wi, taken, wb)
             self._dispatch(state, rid, iteration, data, x, wi, taken)
             return len(taken)
         return 0
@@ -978,6 +1121,12 @@ class CodedExecutionEngine:
                                            + len(per_target.get(w_, []))))
             per_target.setdefault(w, []).append(c)
         for w, ids in per_target.items():
+            if self.tracer.enabled:
+                self.tracer.emit(obs.KIND_FAILOVER, worker=w, round_id=rid,
+                                 failed=failed_w, n=len(ids),
+                                 chunks=tuple(ids))
+            logger.debug("round %d: failover of chunks %s from crashed "
+                         "worker %d to worker %d", rid, ids, failed_w, w)
             self._dispatch(state, rid, iteration, data, x, w, ids)
             self.workers[w].promote_round(rid)
 
@@ -1025,10 +1174,14 @@ class CodedExecutionEngine:
             tasks[(p, w)] = task
             attempt_owner[p].append(w)
             busy.add(w)
+            if self.tracer.enabled:
+                self.tracer.emit(obs.KIND_ENQUEUE, worker=w, round_id=rid,
+                                 chunk_id=p)
             self.workers[w].submit(task)
 
         for p in range(n_parts):
             launch(p, int(data.placement[p][0]))
+        t_disp = time.perf_counter()
 
         spec_budget = strategy.max_speculative
         n_done = 0
@@ -1150,6 +1303,15 @@ class CodedExecutionEngine:
         y = data.assemble(results)
         t_done = time.perf_counter()
 
+        if self.tracer.enabled:
+            emit = self.tracer.emit
+            emit(obs.KIND_ROUND_DISPATCH, round_id=rid, t=t0,
+                 dur=t_disp - t0, strategy=type(strategy).__name__)
+            emit(obs.KIND_ROUND_COLLECT, round_id=rid, t=t_disp,
+                 dur=t_collected - t_disp, speculated=speculated)
+            emit(obs.KIND_ROUND_DECODE, round_id=rid, t=t_collected,
+                 dur=t_done - t_collected)
+
         speeds = np.full(n, np.nan)
         response = np.full(n, np.nan)
         primaries = {int(data.placement[p][0]) for p in range(n_parts)}
@@ -1185,4 +1347,5 @@ class CodedExecutionEngine:
             planned_makespan=work_per_part,
             mispredicted=speculated,
             inflight=inflight, rhs_width=width)
+        self._publish_round(metrics)
         return RoundOutput(y=y, metrics=metrics)

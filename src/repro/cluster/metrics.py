@@ -67,7 +67,15 @@ class RoundMetrics:
 
 @dataclasses.dataclass
 class JobMetrics:
-    """Lifecycle of one job through the service."""
+    """Lifecycle of one job through the service.
+
+    ``t_start``/``t_done`` default to 0.0 until the scheduler stamps them;
+    a job that errors (or is inspected) before a stamp lands would read
+    ``t_start - t_submit`` as a huge negative number, so the timing
+    properties return NaN until both operands are real stamps, and
+    :meth:`ServiceReport.from_jobs` keeps such jobs out of the latency
+    percentiles.
+    """
 
     job_id: int
     kind: str
@@ -80,15 +88,21 @@ class JobMetrics:
 
     @property
     def queue_wait(self) -> float:
-        return self.t_start - self.t_submit
+        if self.t_start <= 0.0 or self.t_submit <= 0.0:
+            return float("nan")
+        return max(self.t_start - self.t_submit, 0.0)
 
     @property
     def service_time(self) -> float:
-        return self.t_done - self.t_start
+        if self.t_done <= 0.0 or self.t_start <= 0.0:
+            return float("nan")
+        return max(self.t_done - self.t_start, 0.0)
 
     @property
     def latency(self) -> float:
-        return self.t_done - self.t_submit
+        if self.t_done <= 0.0 or self.t_submit <= 0.0:
+            return float("nan")
+        return max(self.t_done - self.t_submit, 0.0)
 
     @property
     def useful_rows(self) -> float:
@@ -134,8 +148,14 @@ class ServiceReport:
     def from_jobs(cls, jobs: List[JobMetrics], wall_time: float,
                   max_inflight: int = 1, peak_inflight: int = 1
                   ) -> "ServiceReport":
-        lat = [j.latency for j in jobs]
-        qw = [j.queue_wait for j in jobs]
+        # errored / half-stamped jobs have NaN timings (see JobMetrics):
+        # they count toward n_jobs but must not skew the percentiles
+        def _finite(values):
+            return [v for v in values if np.isfinite(v)]
+
+        clean = [j for j in jobs if j.error is None]
+        lat = _finite(j.latency for j in clean)
+        qw = _finite(j.queue_wait for j in clean)
         useful = sum(j.useful_rows for j in jobs)
         wasted = sum(j.wasted_rows for j in jobs)
         n_rounds = sum(len(j.rounds) for j in jobs)
@@ -150,15 +170,15 @@ class ServiceReport:
             js = [j for j in jobs if j.strategy == strat]
             u = sum(j.useful_rows for j in js)
             w = sum(j.wasted_rows for j in js)
-            sl = [j.latency for j in js]
-            st = sum(j.service_time for j in js)
+            sl = _finite(j.latency for j in js if j.error is None)
+            st = _finite(j.service_time for j in js if j.error is None)
             by[strat] = {
                 "jobs": len(js),
                 "rounds": sum(len(j.rounds) for j in js),
                 "jobs_per_s": len(js) / wall_time if wall_time > 0 else 0.0,
                 "p50_latency": percentile(sl, 50),
                 "p99_latency": percentile(sl, 99),
-                "mean_service_time": st / len(js) if js else 0.0,
+                "mean_service_time": sum(st) / len(st) if st else 0.0,
                 "wasted_fraction": w / (u + w) if (u + w) > 0 else 0.0,
             }
         return cls(
@@ -176,6 +196,84 @@ class ServiceReport:
             total_retracted=sum(j.retracted_chunks for j in jobs),
             coalesced_requests=coalesced_requests,
             batched_rounds=batched_rounds)
+
+    @classmethod
+    def from_registry(cls, registry, wall_time: float,
+                      max_inflight: int = 1, peak_inflight: int = 1
+                      ) -> "ServiceReport":
+        """Rebuild a report as a view over a live metrics registry.
+
+        ``registry`` is the engine's :class:`~repro.cluster.obs.
+        MetricsRegistry` (duck-typed: anything with ``value``/``get``).
+        Counts are exact (same counters the engine/service increment);
+        latency percentiles are the Prometheus bucket-interpolated
+        estimate, so they approximate :meth:`from_jobs` to within a
+        histogram bucket.  Unlike ``from_jobs`` this needs no retained
+        per-job objects — it is the long-lived-service path, and the
+        bridge that keeps the report a *view* over the registry instead
+        of a parallel accounting plane.
+        """
+        def _q(name: str, q: float, **labels) -> float:
+            h = registry.get(name)
+            if h is None or h.count == 0:
+                return float("nan")
+            child = h.labels(**labels) if labels else h
+            return float(child.quantile(q))
+
+        n_jobs = int(registry.value("s2c2_jobs_total"))
+        n_rounds = int(registry.value("s2c2_rounds_total"))
+        useful = registry.value("s2c2_useful_rows_total")
+        wasted = registry.value("s2c2_wasted_rows_total")
+        by: Dict[str, Dict[str, float]] = {}
+        jobs_fam = registry.get("s2c2_jobs_total")
+        if jobs_fam is not None:
+            strat_i = jobs_fam.labelnames.index("strategy")
+            strats: Dict[str, float] = {}
+            for lv, child in jobs_fam.children().items():
+                strats[lv[strat_i]] = strats.get(lv[strat_i], 0) + child.value
+            rounds_fam = registry.get("s2c2_rounds_total")
+            lat_fam = registry.get("s2c2_job_latency_seconds")
+            for strat, n in sorted(strats.items()):
+                lat_child = None
+                if lat_fam is not None:
+                    lat_child = lat_fam.children().get((strat,))
+                u = registry.value("s2c2_useful_rows_total", strategy=strat) \
+                    if rounds_fam is not None else 0.0
+                w = registry.value("s2c2_wasted_rows_total", strategy=strat) \
+                    if rounds_fam is not None else 0.0
+                by[strat] = {
+                    "jobs": n,
+                    "rounds": registry.value("s2c2_rounds_total",
+                                             strategy=strat),
+                    "jobs_per_s": n / wall_time if wall_time > 0 else 0.0,
+                    "p50_latency": (lat_child.quantile(50) if lat_child
+                                    else float("nan")),
+                    "p99_latency": (lat_child.quantile(99) if lat_child
+                                    else float("nan")),
+                    "mean_service_time": (lat_child.sum / lat_child.count
+                                          if lat_child and lat_child.count
+                                          else 0.0),
+                    "wasted_fraction": w / (u + w) if (u + w) > 0 else 0.0,
+                }
+        return cls(
+            n_jobs=n_jobs, n_rounds=n_rounds, wall_time=wall_time,
+            jobs_per_s=n_jobs / wall_time if wall_time > 0 else 0.0,
+            rounds_per_s=n_rounds / wall_time if wall_time > 0 else 0.0,
+            p50_latency=_q("s2c2_job_latency_seconds", 50),
+            p99_latency=_q("s2c2_job_latency_seconds", 99),
+            p50_queue_wait=_q("s2c2_job_queue_wait_seconds", 50),
+            p99_queue_wait=_q("s2c2_job_queue_wait_seconds", 99),
+            wasted_fraction=wasted / (useful + wasted)
+            if (useful + wasted) > 0 else 0.0,
+            by_strategy=by, max_inflight=max_inflight,
+            peak_inflight=peak_inflight,
+            total_steals=int(registry.value("s2c2_steals_total")),
+            total_retracted=int(
+                registry.value("s2c2_chunks_retracted_total")),
+            coalesced_requests=int(
+                registry.value("s2c2_coalesced_requests_total")),
+            batched_rounds=int(
+                registry.value("s2c2_batched_rounds_total")))
 
     def format(self) -> str:
         lines = [

@@ -39,6 +39,7 @@ Job kinds (the §6.3 workloads):
 from __future__ import annotations
 
 import dataclasses
+import logging
 import queue
 import threading
 import time
@@ -46,6 +47,7 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+from repro.cluster import obs
 from repro.cluster.data import CodedData, replica_placement
 from repro.cluster.master import CodedExecutionEngine, RoundOutput
 from repro.cluster.metrics import JobMetrics, RoundMetrics, ServiceReport
@@ -53,6 +55,8 @@ from repro.core.strategies import UncodedReplication
 
 __all__ = ["Job", "MatvecJob", "PageRankJob", "RegressionJob",
            "JobService", "ServiceSaturated", "JobHandle", "RoundCoalescer"]
+
+logger = logging.getLogger("repro.cluster.service")
 
 
 class ServiceSaturated(RuntimeError):
@@ -128,6 +132,12 @@ class RoundCoalescer:
         self._groups: Dict[Tuple, _CoalesceGroup] = {}
         self.merged_rounds = 0       # batched rounds launched (B >= 2)
         self.merged_requests = 0     # requests served via batched rounds
+        self._m_merged_rounds = engine.registry.counter(
+            "s2c2_coalesced_rounds_total",
+            "multi-RHS rounds launched by the coalescer (B >= 2)")
+        self._m_merged_reqs = engine.registry.counter(
+            "s2c2_coalesced_requests_total",
+            "matvec requests served via a coalesced round")
 
     def matvec(self, data: CodedData, x: np.ndarray,
                strategy) -> RoundOutput:
@@ -180,6 +190,16 @@ class RoundCoalescer:
                 with self._lock:
                     self.merged_rounds += 1
                     self.merged_requests += len(xs)
+                self._m_merged_rounds.inc()
+                self._m_merged_reqs.inc(len(xs))
+                tracer = self.engine.tracer
+                if tracer.enabled:
+                    tracer.emit(obs.KIND_COALESCE,
+                                round_id=out.metrics.round_id,
+                                merged=len(xs), shard=key[0])
+                logger.debug("coalesced %d requests on shard %s into "
+                             "round %d", len(xs), key[0],
+                             out.metrics.round_id)
         except BaseException as exc:         # every participant re-raises
             grp.error = exc
         finally:
@@ -386,6 +406,22 @@ class JobService:
         self._t_first_submit: Optional[float] = None   # throughput window
         self._shared_ids: Set[str] = set()   # shard ids owned by the service
         self._shared_data: List[CodedData] = []
+        # service-plane metrics live in the ENGINE's registry, so one
+        # render() (or ServiceReport.from_registry) covers both planes
+        reg = engine.registry
+        self._m_jobs = reg.counter(
+            "s2c2_jobs_total", "jobs completed",
+            ("kind", "strategy", "status"))
+        self._m_latency = reg.histogram(
+            "s2c2_job_latency_seconds",
+            "job latency, submit to done (ok jobs)", ("strategy",))
+        self._m_queue_wait = reg.histogram(
+            "s2c2_job_queue_wait_seconds",
+            "admission-queue wait, submit to slot start (ok jobs)")
+        self._m_inflight_jobs = reg.gauge(
+            "s2c2_inflight_jobs", "jobs currently holding a scheduler slot")
+        self._m_rejected = reg.counter(
+            "s2c2_jobs_rejected_total", "submissions refused at saturation")
         self.coalescer = (RoundCoalescer(engine, max_batch, coalesce_hold_s)
                           if coalesce else None)
         self._exec = _CoalescingEngine(engine, self.coalescer,
@@ -432,6 +468,9 @@ class JobService:
         except queue.Full:
             with self._lock:
                 self._accepted -= 1
+            self._m_rejected.inc()
+            logger.debug("job %d rejected: admission queue full (%d)",
+                         jid, self.queue.maxsize)
             raise ServiceSaturated(
                 f"job queue full ({self.queue.maxsize}); retry later")
         with self._lock:
@@ -479,6 +518,8 @@ class JobService:
                 self._in_service += 1
                 self._peak_inflight = max(self._peak_inflight,
                                           self._in_service)
+                in_service = self._in_service
+            self._m_inflight_jobs.set(in_service)
             data = None
             owned = False
             try:
@@ -488,13 +529,25 @@ class JobService:
                     self._exec, data, m.rounds.append)
             except Exception as exc:          # record, don't kill the service
                 m.error = f"{type(exc).__name__}: {exc}"
+                logger.warning("job %d (%s) failed: %s", m.job_id, m.kind,
+                               m.error)
             finally:
                 if data is not None and owned:
                     self.engine.unload(data)
             m.t_done = time.perf_counter()
+            status = "error" if m.error else "ok"
+            self._m_jobs.labels(kind=m.kind, strategy=m.strategy,
+                                status=status).inc()
+            if m.error is None:
+                # errored jobs may lack meaningful stamps (satellite fix in
+                # metrics.py); only clean jobs feed the latency histograms
+                self._m_latency.labels(strategy=m.strategy).observe(m.latency)
+                self._m_queue_wait.observe(m.queue_wait)
             with self._lock:
                 self._in_service -= 1
+                in_service = self._in_service
                 self.completed.append(m)
+            self._m_inflight_jobs.set(in_service)
             handle.done.set()
 
     # -- reporting ----------------------------------------------------------

@@ -52,6 +52,7 @@ copy of each shard instead of re-uploading rows on every chunk.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import threading
 import time
 import weakref
@@ -61,8 +62,13 @@ from typing import (Callable, Deque, Dict, List, Optional, Sequence, Set,
 
 import numpy as np
 
+from repro.cluster import obs
+from repro.cluster.obs import NULL_TRACER, Tracer
+
 __all__ = ["ChunkTask", "ChunkDone", "WorkerDone", "WorkerFailed", "Worker",
            "numpy_backend", "kernel_backend", "KernelBackend", "rhs_width"]
+
+logger = logging.getLogger("repro.cluster.worker")
 
 ComputeFn = Callable[[np.ndarray, np.ndarray], np.ndarray]
 
@@ -367,12 +373,14 @@ class Worker(threading.Thread):
     """One cluster node: shard store + retractable sequential chunk executor."""
 
     def __init__(self, worker_id: int, event_queue,
-                 injector, compute: ComputeFn = numpy_backend):
+                 injector, compute: ComputeFn = numpy_backend,
+                 tracer: Optional[Tracer] = None):
         super().__init__(name=f"worker-{worker_id}", daemon=True)
         self.worker_id = worker_id
         self.events = event_queue
         self.injector = injector
         self.compute = compute
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         # shard-aware backends get the whole shard + chunk range and may
         # keep a device-resident copy (see KernelBackend)
         self._compute_chunk = getattr(compute, "compute_chunk", None)
@@ -467,6 +475,13 @@ class Worker(threading.Thread):
                 self._items = deque(kept)
                 self.retracted_total += len(taken)
         now = time.perf_counter()
+        if taken:
+            if self.tracer.enabled:
+                for cid in taken:
+                    self.tracer.emit(obs.KIND_RETRACT, worker=self.worker_id,
+                                     round_id=round_id, chunk_id=cid, t=now)
+            logger.debug("worker %d: retracted chunks %s of round %d",
+                         self.worker_id, taken, round_id)
         for tp in drained:
             self.events.put(WorkerDone(self.worker_id, tp.task.round_id,
                                        now, tp.done, cancelled=True,
@@ -557,14 +572,25 @@ class Worker(threading.Thread):
             # cancelled (or tenant unloaded mid-task): remaining chunks
             # abandoned, ack so the master knows this worker is idle
             self._purge_task(tp)
+            now = time.perf_counter()
+            if self.tracer.enabled:
+                self.tracer.emit(obs.KIND_CANCEL_ACK, worker=self.worker_id,
+                                 round_id=task.round_id, t=now)
             self.events.put(WorkerDone(self.worker_id, task.round_id,
-                                       time.perf_counter(), tp.done,
+                                       now, tp.done,
                                        cancelled=True,
                                        t_start=tp.t_start))
             return
         s = self.injector.speed(self.worker_id, task.iteration)
         if s <= 0.0:
             self.dead = True        # fail-stop: no event, ever again
+            if self.tracer.enabled:
+                self.tracer.emit(obs.KIND_FAIL_STOP, worker=self.worker_id,
+                                 round_id=task.round_id,
+                                 iteration=task.iteration)
+            logger.debug("worker %d: injected fail-stop at iteration %d "
+                         "(round %d)", self.worker_id, task.iteration,
+                         task.round_id)
             self._drop_everything()
             return
         t0 = time.perf_counter()
@@ -578,8 +604,14 @@ class Worker(threading.Thread):
             # a backend error is NOT fail-stop silence: report the real
             # reason terminally, then go dead (every later item is dropped)
             self.dead = True
+            now = time.perf_counter()
+            if self.tracer.enabled:
+                self.tracer.emit(obs.KIND_WORKER_FAILED,
+                                 worker=self.worker_id,
+                                 round_id=task.round_id, chunk_id=chunk_id,
+                                 t=now, error=f"{type(exc).__name__}: {exc}")
             self.events.put(WorkerFailed(
-                self.worker_id, task.round_id, time.perf_counter(),
+                self.worker_id, task.round_id, now,
                 f"{type(exc).__name__}: {exc}", t_start=tp.t_start))
             self._drop_everything()
             return
@@ -591,6 +623,14 @@ class Worker(threading.Thread):
             time.sleep(target - elapsed)
         t1 = time.perf_counter()
         self.busy_s += t1 - t0
+        if self.tracer.enabled:
+            # the chunk's execution span, worker-stamped: start = compute
+            # begin, dur includes the injector's throttling sleep, and the
+            # injected speed rides along so a slow span is attributable
+            self.tracer.emit(obs.KIND_CHUNK, worker=self.worker_id,
+                             round_id=task.round_id, chunk_id=chunk_id,
+                             t=t0, dur=t1 - t0, speed=s,
+                             rows=r1 - r0, width=rhs_width(task.x))
         self.events.put(ChunkDone(self.worker_id, task.round_id,
                                   chunk_id, y, t1, t_start=tp.t_start))
         with self._cv:
