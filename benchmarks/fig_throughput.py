@@ -36,6 +36,15 @@ Four sections:
   trace.  Acceptance: coalescing-on jobs/s >= off (the merged rounds pay
   one dispatch/steal/decode/event overhead for up to ``max_batch``
   requests).
+* ``transport_ab`` — the process-boundary cost and the chaos robustness
+  budget: the SAME shared-matrix job set through (a) the in-process
+  engine, (b) a real ``SocketTransport`` process pool, and (c) the
+  process pool wrapped in ``FaultyTransport`` chaos (5% message drop +
+  one mid-run worker SIGKILL).  Every arm must complete 100% of its jobs
+  bit-correct (the chaos arm exercises verdict → failover end to end);
+  ``transport/ab`` records the paired in-process vs multi-process
+  makespans and ``transport/chaos`` the chaos arm's completion rate and
+  makespan inflation over the clean process pool.
 * ``trace_overhead`` — the observability overhead budget: interleaved
   tracer-on/tracer-off arms replaying the same straggler-hit round
   sequence (identical seeds ⇒ identical per-round work), rounds paired by
@@ -53,9 +62,10 @@ import numpy as np
 
 import benchmarks.common as common
 from benchmarks.common import BENCH, Csv
-from repro.cluster import (ClusterConfig, CodedExecutionEngine,
-                           FailStopInjector, JobService, MatvecJob,
-                           PageRankJob, RegressionJob, TraceInjector, Tracer)
+from repro.cluster import (ChaosConfig, ClusterConfig, CodedExecutionEngine,
+                           FailStopInjector, FaultyTransport, JobService,
+                           MatvecJob, NoSlowdown, PageRankJob, RegressionJob,
+                           SocketTransport, TraceInjector, Tracer)
 from repro.core.coding import MDSCode
 from repro.core.strategies import (GeneralS2C2, MDSCoded, UncodedReplication)
 from repro.core.traces import controlled_traces
@@ -376,6 +386,88 @@ def coalesce_ab(csv: Csv) -> None:
                  p50_latency_off_s=rep_off.p50_latency)
 
 
+N_TRANSPORT_JOBS = 8
+
+
+def _run_transport_arm(transport):
+    """One transport A/B arm: the same seeded shared-matrix job set.
+
+    Returns (measured wall seconds, completion rate).  A warm job runs
+    before the clock starts so process spawn / connect / shard install
+    cost is excluded — the comparison is per-round wire overhead, not
+    pool startup.  Every output is checked against the uncoded reference;
+    a job that errors or mismatches counts against the completion rate
+    instead of aborting the benchmark.
+    """
+    n, k, chunks = 6, 4, 12
+    rng = np.random.default_rng(41)
+    a = rng.standard_normal((480, 80))
+    xs = [rng.standard_normal(80) for _ in range(N_TRANSPORT_JOBS)]
+    eng = CodedExecutionEngine(
+        ClusterConfig(n_workers=n, k=k, row_cost=2e-4,
+                      starvation_timeout=30.0),
+        injector=NoSlowdown(), transport=transport)
+    svc = JobService(eng, max_inflight=2)
+    try:
+        shared = svc.share_matrix(a, chunks=chunks)
+        strat = GeneralS2C2(n, k, a.shape[0], chunks=chunks)
+        warm = svc.submit(MatvecJob(a, [rng.standard_normal(80)], strat,
+                                    data=shared))
+        assert warm.wait(timeout=120.0)
+        t0 = time.perf_counter()
+        handles = [svc.submit(MatvecJob(a, [x], strat, data=shared))
+                   for x in xs]
+        for h in handles:
+            assert h.wait(timeout=120.0), "transport arm job hung"
+        wall = time.perf_counter() - t0
+        ok = sum(1 for h, x in zip(handles, xs)
+                 if h.metrics.error is None
+                 and np.allclose(h.output[0], a @ x, rtol=1e-9))
+        return wall, ok / len(xs)
+    finally:
+        svc.close()
+        eng.shutdown()
+
+
+def transport_ab(csv: Csv) -> None:
+    # the chaos arm's kill fires during the warm job (2 delivered chunks),
+    # so the measured jobs run on the n-1 survivors (n-1 >= k: still
+    # decodable) with 5% of all non-protected messages dropped — the
+    # at-least-once submit/event machinery and the §4.4 verdict + failover
+    # path are both inside the measured window's serving loop
+    wall_in, rate_in = _run_transport_arm(None)
+    wall_proc, rate_proc = _run_transport_arm(
+        SocketTransport(connect_timeout=60.0))
+    chaos = ChaosConfig(seed=0, p_drop=0.05, kill_worker=5,
+                        kill_after_chunks=2)
+    wall_chaos, rate_chaos = _run_transport_arm(
+        FaultyTransport(chaos, hb_interval=0.05, hb_miss=4, dead_after=2,
+                        connect_timeout=60.0))
+    overhead = wall_proc / wall_in
+    inflation = wall_chaos / wall_proc
+    csv.add("throughput/transport/ab", 0.0,
+            f"makespan inproc={wall_in:.3f}s proc={wall_proc:.3f}s "
+            f"proc_vs_inproc={overhead:.2f}x "
+            f"(completion inproc={rate_in:.2f} proc={rate_proc:.2f})")
+    csv.add("throughput/transport/chaos", 0.0,
+            f"makespan chaos={wall_chaos:.3f}s "
+            f"inflation_vs_proc={inflation:.2f}x "
+            f"completion_rate={rate_chaos:.2f} "
+            f"(acceptance: 1.00 under drop+kill)")
+    BENCH.record("transport/ab",
+                 makespan_inproc_s=wall_in, makespan_proc_s=wall_proc,
+                 proc_vs_inproc=overhead,
+                 completion_rate_inproc=rate_in,
+                 completion_rate_proc=rate_proc)
+    BENCH.record("transport/chaos",
+                 makespan_chaos_s=wall_chaos,
+                 inflation_vs_proc=inflation,
+                 completion_rate=rate_chaos)
+    assert rate_in == 1.0 and rate_proc == 1.0, "clean arms must complete"
+    assert rate_chaos == 1.0, \
+        "chaos arm must complete 100% (drop + SIGKILL are recoverable)"
+
+
 # the overhead arms use 5x-longer chunks than the throughput sweep: at
 # ROW_COST=2e-4 a chunk's virtual time (~6 ms) is comparable to thread-
 # scheduling jitter, so per-round noise (±10%) swamps a ~1% tracer cost;
@@ -449,4 +541,5 @@ def main(csv: Csv) -> None:
     decode_bench(csv)
     gemm_vs_gemv(csv)
     coalesce_ab(csv)
+    transport_ab(csv)
     trace_overhead(csv)

@@ -38,14 +38,17 @@ from repro.cluster.injectors import (BurstyInjector, FailStopInjector,
                                      NoSlowdown, SlowdownInjector,
                                      TracedInjector, TraceInjector)
 from repro.cluster.master import (ClusterConfig, CodedExecutionEngine,
-                                  RoundHandle, RoundOutput)
+                                  EngineClosed, RoundHandle, RoundOutput)
 from repro.cluster.metrics import JobMetrics, RoundMetrics, ServiceReport
 from repro.cluster.obs import (Counter, Gauge, Histogram, MetricsRegistry,
                                TraceRecord, Tracer, chrome_trace_events,
                                configure_logging, export_chrome_trace)
-from repro.cluster.service import (JobService, MatvecJob, PageRankJob,
-                                   RegressionJob, RoundCoalescer,
-                                   ServiceSaturated)
+from repro.cluster.service import (AdmissionTimeout, JobService, MatvecJob,
+                                   PageRankJob, RegressionJob,
+                                   RoundCoalescer, ServiceSaturated)
+from repro.cluster.transport import (ChaosConfig, FaultyTransport,
+                                     InProcTransport, SocketTransport,
+                                     Transport)
 from repro.cluster.worker import (ChunkDone, KernelBackend, Worker,
                                   WorkerDone, WorkerFailed, kernel_backend)
 
@@ -58,7 +61,9 @@ __all__ = [
     "ClusterConfig", "CodedExecutionEngine", "RoundHandle", "RoundOutput",
     "RoundMetrics", "JobMetrics", "ServiceReport",
     "JobService", "MatvecJob", "PageRankJob", "RegressionJob",
-    "RoundCoalescer", "ServiceSaturated",
+    "RoundCoalescer", "ServiceSaturated", "AdmissionTimeout", "EngineClosed",
+    "Transport", "InProcTransport", "SocketTransport", "FaultyTransport",
+    "ChaosConfig",
     "Tracer", "TraceRecord", "MetricsRegistry",
     "Counter", "Gauge", "Histogram",
     "chrome_trace_events", "export_chrome_trace", "configure_logging",

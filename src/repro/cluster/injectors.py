@@ -87,6 +87,17 @@ class BurstyInjector:
         self._speeds: list[np.ndarray] = []             # per generated iter
         self._lock = threading.Lock()
 
+    # picklable (multi-process transport ships injectors to worker
+    # children): the lock is process-local state, recreated on unpickle
+    def __getstate__(self):
+        state = self.__dict__.copy()
+        del state["_lock"]
+        return state
+
+    def __setstate__(self, state):
+        self.__dict__.update(state)
+        self._lock = threading.Lock()
+
     def _extend_to(self, iteration: int) -> None:
         while len(self._speeds) <= iteration:
             start = self._rng.random(self.n) < self.p_start

@@ -75,6 +75,7 @@ from repro.cluster.data import CodedData, ReplicatedData
 from repro.cluster.injectors import SlowdownInjector, TracedInjector
 from repro.cluster.metrics import RoundMetrics
 from repro.cluster.obs import MetricsRegistry, Tracer
+from repro.cluster.transport import InProcTransport, Transport
 from repro.cluster.worker import (ChunkDone, ChunkTask, ComputeFn, Worker,
                                   WorkerDone, WorkerFailed, numpy_backend,
                                   rhs_width)
@@ -86,7 +87,7 @@ from repro.core.strategies import (BasicS2C2, GeneralS2C2, MDSCoded,
 from repro.runtime.elastic import FailureDetector
 
 __all__ = ["ClusterConfig", "CodedExecutionEngine", "RoundOutput",
-           "RoundHandle"]
+           "RoundHandle", "EngineClosed"]
 
 logger = logging.getLogger("repro.cluster.master")
 
@@ -177,6 +178,12 @@ class _RoundState:
         self.first_start_t = np.full(n, np.nan)  # first task began serving
         self.tasks: Dict[int, ChunkTask] = {}   # latest task per worker
         self.cancelled: Set[int] = set()
+        # chunks lost to a dead worker that failover could not place (no
+        # idle / eligible target at verdict time) — retried whenever a
+        # worker goes idle, so a verdict landing mid-burst is recovered as
+        # soon as a survivor frees up instead of relying on a §4.3 wave
+        # budget that may already be spent
+        self.orphans: Set[int] = set()
         self.steals = 0                 # successful steal passes
         self.retracted = 0              # chunks retracted (== re-dispatched)
         self.failures: List[str] = []   # WorkerFailed reasons seen
@@ -185,6 +192,16 @@ class _RoundState:
 
 class _Shutdown:
     """Sentinel routed through the shared event queue to stop the collector."""
+
+
+class EngineClosed(RuntimeError):
+    """The engine (or its service) was shut down; the operation cannot run
+    and any round in flight at close time resolves with this error."""
+
+
+class _EngineClosedSentinel:
+    """Dropped into every live round inbox by ``shutdown()``: the round
+    driver raises :class:`EngineClosed` into its handle and exits."""
 
 
 class CodedExecutionEngine:
@@ -200,8 +217,15 @@ class CodedExecutionEngine:
                  compute: ComputeFn = numpy_backend,
                  predictor: Optional[SpeedPredictor] = None,
                  tracer: Optional[Tracer] = None,
-                 registry: Optional[MetricsRegistry] = None):
+                 registry: Optional[MetricsRegistry] = None,
+                 transport: Optional[Transport] = None):
         self.cfg = cfg
+        # transport plane: in-process worker threads by default; pass a
+        # SocketTransport/FaultyTransport for a real multi-process pool
+        # (see repro.cluster.transport) — the engine's planning/collection
+        # logic is identical either way
+        self.transport: Transport = (transport if transport is not None
+                                     else InProcTransport())
         # observability plane: pass a Tracer to capture the chunk lifecycle
         # (or toggle engine.tracer.enable() later — the default tracer is
         # created disabled, so an untraced engine pays one attribute check
@@ -211,14 +235,14 @@ class CodedExecutionEngine:
         self.registry = registry if registry is not None else MetricsRegistry()
         self._declare_metrics()
         # the injected speed annotates the trace next to the observed speed
-        # (TracedInjector dedups per worker and no-ops while disabled)
+        # (TracedInjector dedups per worker and no-ops while disabled);
+        # remote transports unwrap to `.inner` and re-wrap child-side
         injector = TracedInjector(injector, self.tracer)
         self.events: "queue.Queue" = queue.Queue()
-        self.workers = [Worker(w, self.events, injector, compute,
-                               tracer=self.tracer)
-                        for w in range(cfg.n_workers)]
-        for w in self.workers:
-            w.start()
+        self.workers = self.transport.start(cfg, self.events, injector,
+                                            compute, self.tracer,
+                                            self.registry)
+        self._closed = False
         self.predictor = predictor or SpeedPredictor(cfg.n_workers)
         self.detector = FailureDetector(cfg.n_workers, cfg.k,
                                         slack=cfg.detector_slack,
@@ -251,8 +275,14 @@ class CodedExecutionEngine:
     def _declare_metrics(self) -> None:
         """Register the engine's metric families (idempotent per registry)."""
         reg = self.registry
+        # engine-level families carry the transport kind so an in-process
+        # and a multi-process engine sharing one registry stay separable
+        # (MetricsRegistry.value() aggregates over unnamed labels, so
+        # existing unlabeled reads keep working)
+        self._transport_kind = getattr(self.transport, "kind", "inproc")
         self._m_rounds = reg.counter(
-            "s2c2_rounds_total", "engine rounds completed", ("strategy",))
+            "s2c2_rounds_total", "engine rounds completed",
+            ("strategy", "transport"))
         self._m_chunks = reg.counter(
             "s2c2_chunks_done_total", "chunk completions", ("worker",))
         self._m_steals = reg.counter(
@@ -266,13 +296,13 @@ class CodedExecutionEngine:
             "s2c2_worker_failures_total", "worker backend crash reports")
         self._m_useful = reg.counter(
             "s2c2_useful_rows_total",
-            "row-equivalents used in decodes", ("strategy",))
+            "row-equivalents used in decodes", ("strategy", "transport"))
         self._m_wasted = reg.counter(
             "s2c2_wasted_rows_total",
-            "row-equivalents computed but unused", ("strategy",))
+            "row-equivalents computed but unused", ("strategy", "transport"))
         self._m_makespan = reg.histogram(
             "s2c2_round_makespan_seconds", "round wall time (dispatch "
-            "to decoded)", ("strategy",))
+            "to decoded)", ("strategy", "transport"))
         self._m_decode = reg.histogram(
             "s2c2_round_decode_seconds", "round decode time")
         self._m_inflight = reg.gauge(
@@ -287,11 +317,15 @@ class CodedExecutionEngine:
                        chunk_counts: Optional[np.ndarray] = None) -> None:
         """Fold one finished round into the registry (round granularity:
         one labeled increment per counter, never per chunk)."""
-        self._m_rounds.labels(strategy=m.strategy).inc()
-        self._m_makespan.labels(strategy=m.strategy).observe(m.makespan)
+        tk = self._transport_kind
+        self._m_rounds.labels(strategy=m.strategy, transport=tk).inc()
+        self._m_makespan.labels(strategy=m.strategy,
+                                transport=tk).observe(m.makespan)
         self._m_decode.observe(m.decode_time)
-        self._m_useful.labels(strategy=m.strategy).inc(m.total_useful)
-        self._m_wasted.labels(strategy=m.strategy).inc(m.total_wasted)
+        self._m_useful.labels(strategy=m.strategy,
+                              transport=tk).inc(m.total_useful)
+        self._m_wasted.labels(strategy=m.strategy,
+                              transport=tk).inc(m.total_wasted)
         if m.steals:
             self._m_steals.inc(m.steals)
         if m.retracted_chunks:
@@ -367,6 +401,12 @@ class CodedExecutionEngine:
             rid = self._round_seq
         inbox: "queue.Queue" = queue.Queue()
         with self._rounds_lock:
+            # checked under the same lock shutdown() takes before it
+            # snapshots live inboxes: a round is either registered (and
+            # will receive the close sentinel) or refused here — never
+            # silently orphaned between the two
+            if self._closed:
+                raise EngineClosed("engine is shut down")
             self._rounds[rid] = inbox
             inflight = len(self._rounds)
         self._m_inflight.set(inflight)
@@ -377,6 +417,7 @@ class CodedExecutionEngine:
             self._rounds.pop(rid, None)
             inflight = len(self._rounds)
         self._m_inflight.set(inflight)
+        self.transport.round_retired(rid)
 
     def inflight_rounds(self) -> int:
         with self._rounds_lock:
@@ -432,12 +473,23 @@ class CodedExecutionEngine:
                 worker.drop_shard(data.shard_id)
 
     def shutdown(self) -> None:
-        for w in self.workers:
-            w.stop()
-        for w in self.workers:
-            w.join(timeout=10.0)
-        self.events.put(_Shutdown())
-        self._collector.join(timeout=10.0)
+        """Stop the pool and the collector.  Idempotent and safe with
+        rounds in flight: a second call is a no-op, and every in-flight
+        handle resolves with :class:`EngineClosed` (never hangs)."""
+        with self._rounds_lock:
+            if self._closed:
+                return
+            self._closed = True
+            inboxes = list(self._rounds.values())
+        # wake every live round driver with the close sentinel FIRST so
+        # their handles resolve even if teardown below is slow
+        for inbox in inboxes:
+            inbox.put(_EngineClosedSentinel())
+        try:
+            self.transport.shutdown()
+        finally:
+            self.events.put(_Shutdown())
+            self._collector.join(timeout=10.0)
 
     # ------------------------------------------------------------------
     # prediction / observation
@@ -650,11 +702,28 @@ class CodedExecutionEngine:
 
         state = _RoundState(n, k, C)
         t0 = time.perf_counter()
+        fenced: List[int] = []
         for w in range(n):
             if alloc.count[w] > 0:
                 ids = [int((alloc.begin[w] + j) % C)
                        for j in range(int(alloc.count[w]))]
+                if w in self.dead:
+                    # the planner can still allocate to a CONFIRMED-dead
+                    # worker (its verdict raced this round's plan):
+                    # dispatching into the black hole would strand those
+                    # coverage slots until starvation, so divert them.
+                    # Only the engine-level fence counts here — a worker
+                    # whose private dead flag is set but that the §4.4
+                    # detector has not yet confirmed must still receive
+                    # its allocation, because its SILENCE on dispatched
+                    # work is exactly the evidence the detector needs.
+                    state.cancelled.add(w)
+                    fenced.extend(ids)
+                    continue
                 self._dispatch(state, rid, iteration, data, x, w, ids)
+        if fenced:
+            state.orphans |= self._failover_dispatch(
+                state, rid, iteration, data, x, -1, sorted(set(fenced)))
         t_disp = time.perf_counter()
 
         active = {w for w in range(n) if alloc.count[w] > 0}
@@ -703,6 +772,9 @@ class CodedExecutionEngine:
             wait = min(max(deadline - now, 1e-4), cfg.starvation_timeout)
             try:
                 ev = inbox.get(timeout=wait)
+                if isinstance(ev, _EngineClosedSentinel):
+                    raise EngineClosed(
+                        f"round {rid}: engine shut down mid-round")
             except queue.Empty:
                 now = time.perf_counter()
                 # liveness reference: while reassign waves remain, a busy
@@ -714,9 +786,19 @@ class CodedExecutionEngine:
                 ref = (last_arrival if waves > cfg.max_reassign_waves
                        else max(last_arrival, self._engine_last_event()))
                 if now - ref >= cfg.starvation_timeout:
+                    # dump the stuck coverage state: which chunks are
+                    # short, who covers them, who still owes them
+                    detail = "; ".join(
+                        f"chunk {c}: covered={sorted(state.used[c])} "
+                        f"assigned={sorted(w for w in range(n) if c in state.assigned[w])} "
+                        f"outstanding={sorted(w for w in range(n) if c in state.outstanding[w])}"
+                        for c in range(C) if len(state.used[c]) < k)
                     raise RuntimeError(
                         f"cluster starved: round {rid} got no events for "
-                        f"{cfg.starvation_timeout}s (need={state.need})")
+                        f"{cfg.starvation_timeout}s (need={state.need}; "
+                        f"cancelled={sorted(state.cancelled)}; "
+                        f"dead={sorted(self.dead)}; "
+                        f"orphans={sorted(state.orphans)}; {detail})")
                 if now < current_deadline():
                     continue            # clamped probe, deadline not reached
                 if not np.isfinite(state.finish_t).any():
@@ -758,12 +840,17 @@ class CodedExecutionEngine:
                 state.cancelled.add(w)      # stop awaiting it on deadlines
                 lost = sorted(c for c in state.outstanding[w]
                               if len(state.used[c]) < k)
+                logger.debug("round %d: worker %d failed with outstanding=%s"
+                             " lost=%s", rid, w,
+                             sorted(state.outstanding[w]), lost)
                 state.outstanding[w].clear()
                 # fail over NOW: the crashed worker's uncovered obligation
-                # moves to live workers without waiting for a §4.3 timeout
+                # moves to live workers without waiting for a §4.3 timeout.
+                # Whatever cannot be placed yet (all survivors busy) is
+                # parked as an orphan and retried at each idle transition.
                 if lost:
-                    self._failover_dispatch(state, rid, iteration, data, x,
-                                            w, lost)
+                    state.orphans |= self._failover_dispatch(
+                        state, rid, iteration, data, x, w, lost)
                 continue
             if isinstance(ev, WorkerDone):
                 if ev.round_id != rid:
@@ -777,6 +864,7 @@ class CodedExecutionEngine:
                     # chunks' deadline tracking.  The master clears the
                     # ledger itself at each point it abandons work
                     # (retraction, wave cancel, failure).
+                    self._retry_orphans(state, rid, iteration, data, x)
                     self._steal_pass(state, rid, iteration, data, x,
                                      ev.worker)
                     continue
@@ -801,8 +889,10 @@ class CodedExecutionEngine:
                         durations = np.sort(service)[:k]
                         window = max(float(durations.mean()), planned)
                         window_frozen = True
-                # the finisher is idle (or about to be): steal queued
-                # coverage from the most backlogged workers into it
+                # the finisher is idle (or about to be): place any parked
+                # failover orphans first, then steal queued coverage from
+                # the most backlogged workers into it
+                self._retry_orphans(state, rid, iteration, data, x)
                 self._steal_pass(state, rid, iteration, data, x, ev.worker)
                 continue
             if not isinstance(ev, ChunkDone) or ev.round_id != rid:
@@ -821,8 +911,13 @@ class CodedExecutionEngine:
                 state.need -= 1
                 if len(state.used[c]) >= k:
                     state.pending.discard(c)    # fully covered
+                    state.orphans.discard(c)
             else:
                 state.wasted_chunks[w] += 1
+            if not state.outstanding[w]:
+                # this worker just went idle-in-round: an earlier verdict
+                # may have parked orphans waiting for exactly this moment
+                self._retry_orphans(state, rid, iteration, data, x)
             # chunk-granular idle scan: a worker idled by ANOTHER round's
             # completion sends this round no event, so piggyback a cheap
             # sweep on our own chunk stream
@@ -832,7 +927,7 @@ class CodedExecutionEngine:
         # cancel everything still running — the round is decodable
         for w, task in state.tasks.items():
             if not np.isfinite(state.finish_t[w]):
-                task.cancel.set()
+                self.workers[w].cancel_task(task)
                 state.cancelled.add(w)
 
         # decode from exactly-k coverage: gather the used results compactly
@@ -971,7 +1066,7 @@ class CodedExecutionEngine:
                     and w not in state.cancelled:
                 still_needed = any(c in short for c in state.assigned[w])
                 if not still_needed:
-                    state.tasks[w].cancel.set()
+                    self.workers[w].cancel_task(state.tasks[w])
                     state.cancelled.add(w)
                     # master-initiated abandonment clears the ledger HERE
                     # (never from the ack, which could race a re-dispatch)
@@ -979,6 +1074,7 @@ class CodedExecutionEngine:
         max_extra = 0
         for w, ids in extra.items():
             if ids:
+                state.orphans.difference_update(ids)
                 self._dispatch(state, rid, iteration, data, x, w, ids)
                 # recovery work is deadline-critical: jump the cross-round
                 # FIFO instead of queueing behind other tenants
@@ -1099,16 +1195,22 @@ class CodedExecutionEngine:
 
     def _failover_dispatch(self, state: _RoundState, rid: int,
                            iteration: int, data: CodedData, x: np.ndarray,
-                           failed_w: int, chunk_ids: List[int]) -> None:
+                           failed_w: int, chunk_ids: List[int]) -> Set[int]:
         """Re-dispatch a crashed worker's uncovered chunks immediately.
 
         Targets are workers with nothing outstanding for this round (so the
         one-active-task-per-round invariant holds), alive, and not already
-        computing/covering the chunk; least backlogged first.  Chunks with
-        no legal target are left for §4.3 waves / steal passes.
+        computing/covering the chunk; least backlogged first.  Returns the
+        chunks that found no legal target — the caller parks them in
+        ``state.orphans`` and they are retried at every idle transition
+        (``_retry_orphans``), so a verdict that lands while every survivor
+        is busy still gets its lost coverage re-placed once one frees up.
         """
         per_target: Dict[int, List[int]] = {}
+        unplaced: Set[int] = set()
         for c in chunk_ids:
+            if len(state.used[c]) >= data.k:
+                continue                        # covered since it was lost
             cands = [w for w in range(data.n)
                      if w != failed_w and w not in self.dead
                      and not self.workers[w].dead
@@ -1116,6 +1218,7 @@ class CodedExecutionEngine:
                      and c not in state.assigned[w]
                      and w not in state.covered_by[c]]
             if not cands:
+                unplaced.add(c)
                 continue
             w = min(cands, key=lambda w_: (self.workers[w_].backlog()
                                            + len(per_target.get(w_, []))))
@@ -1129,6 +1232,15 @@ class CodedExecutionEngine:
                          "worker %d to worker %d", rid, ids, failed_w, w)
             self._dispatch(state, rid, iteration, data, x, w, ids)
             self.workers[w].promote_round(rid)
+        return unplaced
+
+    def _retry_orphans(self, state: _RoundState, rid: int, iteration: int,
+                       data: CodedData, x: np.ndarray) -> None:
+        """Retry placement of failover orphans (cheap no-op when empty)."""
+        if not state.orphans:
+            return
+        state.orphans = self._failover_dispatch(
+            state, rid, iteration, data, x, -1, sorted(state.orphans))
 
     def worker_stats(self) -> Dict[str, np.ndarray]:
         """Per-worker busy/idle/retraction counters (pool instrumentation)."""
@@ -1193,6 +1305,9 @@ class CodedExecutionEngine:
             wait = min(max(deadline - now, 1e-4), cfg.starvation_timeout)
             try:
                 ev = inbox.get(timeout=wait)
+                if isinstance(ev, _EngineClosedSentinel):
+                    raise EngineClosed(
+                        f"replicated round {rid}: engine shut down mid-round")
             except queue.Empty:
                 now = time.perf_counter()
                 if now - max(last_arrival, self._engine_last_event()) >= \
@@ -1277,7 +1392,7 @@ class CodedExecutionEngine:
                 # losers of the race: cancel + account their work as wasted
                 for ow in attempt_owner[p]:
                     if ow != w and (p, ow) in tasks:
-                        tasks[(p, ow)].cancel.set()
+                        self.workers[ow].cancel_task(tasks[(p, ow)])
             else:
                 wasted[w] += rpp
 
@@ -1298,8 +1413,8 @@ class CodedExecutionEngine:
                         spec_budget -= 1
 
         t_collected = time.perf_counter()
-        for task in tasks.values():
-            task.cancel.set()
+        for (_p, w), task in tasks.items():
+            self.workers[w].cancel_task(task)
         y = data.assemble(results)
         t_done = time.perf_counter()
 

@@ -220,7 +220,10 @@ class ServiceReport:
             child = h.labels(**labels) if labels else h
             return float(child.quantile(q))
 
-        n_jobs = int(registry.value("s2c2_jobs_total"))
+        # a "rejected" child counts refused submissions (AdmissionTimeout /
+        # ServiceSaturated), not jobs that ran — exclude it everywhere
+        n_jobs = int(registry.value("s2c2_jobs_total")
+                     - registry.value("s2c2_jobs_total", status="rejected"))
         n_rounds = int(registry.value("s2c2_rounds_total"))
         useful = registry.value("s2c2_useful_rows_total")
         wasted = registry.value("s2c2_wasted_rows_total")
@@ -228,8 +231,11 @@ class ServiceReport:
         jobs_fam = registry.get("s2c2_jobs_total")
         if jobs_fam is not None:
             strat_i = jobs_fam.labelnames.index("strategy")
+            status_i = jobs_fam.labelnames.index("status")
             strats: Dict[str, float] = {}
             for lv, child in jobs_fam.children().items():
+                if lv[status_i] == "rejected":
+                    continue
                 strats[lv[strat_i]] = strats.get(lv[strat_i], 0) + child.value
             rounds_fam = registry.get("s2c2_rounds_total")
             lat_fam = registry.get("s2c2_job_latency_seconds")

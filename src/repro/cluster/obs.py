@@ -102,6 +102,12 @@ KIND_ROUND_DECODE = "round_decode"
 #: speed annotations (rendered as counter tracks)
 KIND_INJ_SPEED = "inj_speed"
 KIND_OBS_SPEED = "obs_speed"
+#: transport-plane instants (multi-process mode): a worker connection was
+#: lost, a worker reconnected after backoff, or the chaos layer injected a
+#: fault (drop/dup/delay/reorder/kill — the action rides in ``args``)
+KIND_CONN_LOST = "conn_lost"
+KIND_RECONNECT = "reconnect"
+KIND_CHAOS = "chaos"
 
 SPAN_KINDS = frozenset({KIND_CHUNK, KIND_ROUND_PLAN, KIND_ROUND_DISPATCH,
                         KIND_ROUND_COLLECT, KIND_ROUND_DECODE})
@@ -160,6 +166,42 @@ class Tracer:
         """Consistent copy of the buffered records, oldest first."""
         with self._lock:
             return list(self._buf)
+
+    def drain(self) -> List[TraceRecord]:
+        """Atomically remove and return the buffered records, oldest first.
+
+        Used by remote workers to forward their record stream in batches:
+        ``popleft`` is GIL-atomic against concurrent ``emit`` appends, so
+        a record emitted mid-drain is never lost (it simply rides the next
+        batch).
+        """
+        out: List[TraceRecord] = []
+        buf = self._buf
+        while True:
+            try:
+                out.append(buf.popleft())
+            except IndexError:
+                return out
+
+    def absorb(self, records: Iterable[TraceRecord],
+               offset: float = 0.0) -> int:
+        """Append externally produced records, rebasing their clocks.
+
+        ``offset`` is added to every record's timestamp — the master uses
+        the per-worker clock offset it estimated from handshake/heartbeat
+        samples, so remote workers' worker-stamped monotonic times land on
+        the master's ``perf_counter`` axis and one Chrome trace renders a
+        single coherent timeline.  No-op while disabled; returns the
+        number of records absorbed.
+        """
+        if not self.enabled:
+            return 0
+        append = self._buf.append
+        n = 0
+        for r in records:
+            append(r._replace(t=r.t + offset))
+            n += 1
+        return n
 
     def dump(self, path) -> int:
         """Write the buffer as Chrome trace-event JSON; returns #events."""
@@ -532,12 +574,34 @@ class MetricsRegistry:
             return self._metrics.get(name)
 
     def value(self, name: str, **labels) -> float:
-        """Scalar convenience reader: 0.0 when absent (counter semantics)."""
+        """Scalar convenience reader: 0.0 when absent (counter semantics).
+
+        ``labels`` may name a *subset* of the family's label schema: the
+        values of all children matching the given labels are summed (for
+        histograms, their ``sum``).  This keeps strategy-level reads like
+        ``value("s2c2_rounds_total", strategy="GeneralS2C2")`` working
+        unchanged when a family gains an extra dimension (the ``transport``
+        label) — the read aggregates over the unnamed labels.
+        """
         m = self.get(name)
         if m is None:
             return 0.0
         if labels:
-            return m.labels(**labels).value
+            unknown = set(labels) - set(m.labelnames)
+            if unknown:
+                raise ValueError(f"{name}: unknown labels {sorted(unknown)}; "
+                                 f"schema is {m.labelnames}")
+            if set(labels) == set(m.labelnames) and \
+                    not isinstance(m, Histogram):
+                return m.labels(**labels).value
+            want = {m.labelnames.index(k): str(v)
+                    for k, v in labels.items()}
+            total = 0.0
+            for lv, child in m.children().items():
+                if all(lv[i] == v for i, v in want.items()):
+                    total += (child.sum if isinstance(m, Histogram)
+                              else child.value)
+            return total
         if isinstance(m, Histogram):
             return float(m.sum)
         return m.total() if isinstance(m, Counter) else m.value

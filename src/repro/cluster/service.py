@@ -49,18 +49,26 @@ import numpy as np
 
 from repro.cluster import obs
 from repro.cluster.data import CodedData, replica_placement
-from repro.cluster.master import CodedExecutionEngine, RoundOutput
+from repro.cluster.master import (CodedExecutionEngine, EngineClosed,
+                                  RoundOutput)
 from repro.cluster.metrics import JobMetrics, RoundMetrics, ServiceReport
 from repro.core.strategies import UncodedReplication
 
 __all__ = ["Job", "MatvecJob", "PageRankJob", "RegressionJob",
-           "JobService", "ServiceSaturated", "JobHandle", "RoundCoalescer"]
+           "JobService", "ServiceSaturated", "AdmissionTimeout", "JobHandle",
+           "RoundCoalescer"]
 
 logger = logging.getLogger("repro.cluster.service")
 
 
 class ServiceSaturated(RuntimeError):
     """The bounded admission queue is full — resubmit later."""
+
+
+class AdmissionTimeout(ServiceSaturated):
+    """A blocking submit (``submit_timeout``) waited its budget out without
+    a queue slot opening.  Subclasses :class:`ServiceSaturated` so existing
+    saturation handlers keep working."""
 
 
 def _strategy_key(strategy) -> Tuple:
@@ -390,11 +398,17 @@ class JobService:
 
     def __init__(self, engine: CodedExecutionEngine, max_queue: int = 256,
                  max_inflight: int = 4, coalesce: bool = True,
-                 max_batch: int = 8, coalesce_hold_s: float = 1e-3):
+                 max_batch: int = 8, coalesce_hold_s: float = 1e-3,
+                 submit_timeout: Optional[float] = None):
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
         self.engine = engine
         self.max_inflight = max_inflight
+        # default admission-wait budget: None/0 keeps the historical
+        # non-blocking reject; > 0 lets submit() wait that long for a slot
+        # before raising AdmissionTimeout (overridable per call)
+        self.submit_timeout = submit_timeout
+        self._closed = False
         self.queue: "queue.Queue[Optional[JobHandle]]" = queue.Queue(max_queue)
         self.completed: List[JobMetrics] = []
         self._seq = 0
@@ -409,9 +423,10 @@ class JobService:
         # service-plane metrics live in the ENGINE's registry, so one
         # render() (or ServiceReport.from_registry) covers both planes
         reg = engine.registry
+        self._tkind = getattr(engine.transport, "kind", "inproc")
         self._m_jobs = reg.counter(
             "s2c2_jobs_total", "jobs completed",
-            ("kind", "strategy", "status"))
+            ("kind", "strategy", "status", "transport"))
         self._m_latency = reg.histogram(
             "s2c2_job_latency_seconds",
             "job latency, submit to done (ok jobs)", ("strategy",))
@@ -450,8 +465,11 @@ class JobService:
         return data
 
     # -- producer side ------------------------------------------------------
-    def submit(self, job: Job) -> JobHandle:
+    def submit(self, job: Job,
+               timeout: Optional[float] = None) -> JobHandle:
         with self._lock:
+            if self._closed:
+                raise EngineClosed("service is closed")
             self._seq += 1
             jid = self._seq
         metrics = JobMetrics(job_id=jid, kind=job.kind,
@@ -463,12 +481,25 @@ class JobService:
         # must not observe completed == accepted while the job is live
         with self._lock:
             self._accepted += 1
+        wait = self.submit_timeout if timeout is None else timeout
         try:
-            self.queue.put_nowait(handle)
-        except queue.Full:
+            if wait is not None and wait > 0:
+                self.queue.put(handle, timeout=wait)
+            else:
+                self.queue.put_nowait(handle)
+        except (queue.Full,):
             with self._lock:
                 self._accepted -= 1
             self._m_rejected.inc()
+            self._m_jobs.labels(kind=job.kind, strategy=metrics.strategy,
+                                status="rejected",
+                                transport=self._tkind).inc()
+            if wait is not None and wait > 0:
+                logger.debug("job %d rejected: no queue slot within %.3fs",
+                             jid, wait)
+                raise AdmissionTimeout(
+                    f"no admission-queue slot within {wait}s "
+                    f"(queue {self.queue.maxsize}); retry later")
             logger.debug("job %d rejected: admission queue full (%d)",
                          jid, self.queue.maxsize)
             raise ServiceSaturated(
@@ -490,11 +521,41 @@ class JobService:
                 raise TimeoutError(f"{pending} jobs still pending")
             time.sleep(0.002)
 
+    def _resolve_closed(self, handle: "JobHandle") -> None:
+        """Resolve a queued-but-never-started handle with a clean error."""
+        m = handle.metrics
+        now = time.perf_counter()
+        m.t_start = m.t_start or now
+        m.t_done = now
+        m.error = "EngineClosed: service closed before the job started"
+        self._m_jobs.labels(kind=m.kind, strategy=m.strategy,
+                            status="error", transport=self._tkind).inc()
+        with self._lock:
+            self.completed.append(m)
+        handle.done.set()
+
     def close(self) -> None:
+        """Stop the scheduler slots.  Idempotent and safe under load: a
+        second call is a no-op; jobs already executing finish normally,
+        while jobs still queued resolve with an ``EngineClosed`` error —
+        every handle a caller holds is guaranteed to resolve."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
         for _ in self._threads:
             self.queue.put(None)
         for t in self._threads:
             t.join(timeout=30.0)
+        # defensive sweep: anything a slot didn't drain (e.g. a handle that
+        # raced past a slot's exit) must still resolve
+        while True:
+            try:
+                leftover = self.queue.get_nowait()
+            except queue.Empty:
+                break
+            if leftover is not None:
+                self._resolve_closed(leftover)
         with self._lock:
             shared, self._shared_data = self._shared_data, []
             self._shared_ids.clear()
@@ -512,6 +573,11 @@ class JobService:
             handle = self.queue.get()
             if handle is None:
                 return
+            if self._closed:
+                # closing: refuse queued work with a clean resolution so
+                # close() never waits out a backlog of unstarted jobs
+                self._resolve_closed(handle)
+                continue
             m = handle.metrics
             m.t_start = time.perf_counter()
             with self._lock:
@@ -537,7 +603,7 @@ class JobService:
             m.t_done = time.perf_counter()
             status = "error" if m.error else "ok"
             self._m_jobs.labels(kind=m.kind, strategy=m.strategy,
-                                status=status).inc()
+                                status=status, transport=self._tkind).inc()
             if m.error is None:
                 # errored jobs may lack meaningful stamps (satellite fix in
                 # metrics.py); only clean jobs feed the latency histograms

@@ -1,0 +1,1427 @@
+"""Transport plane: in-process queues or a socket-backed process pool.
+
+Everything above this module — planning, any-k collection, §4.3 waves,
+work stealing, failover — talks to workers through a narrow worker-shaped
+surface (``install_shard`` / ``submit`` / ``retract`` / ``promote_round``
+/ ``cancel_task`` / ``backlog`` / ``idle`` / ``abort`` plus the stats
+attributes).  A :class:`Transport` builds that pool:
+
+* :class:`InProcTransport` — the original thread pool over one shared
+  ``queue.Queue`` (zero-copy, deterministic; the test double and the
+  default);
+* :class:`SocketTransport` — a **process-based** pool: each worker is a
+  real child process (``multiprocessing`` spawn) running the exact same
+  :class:`~repro.cluster.worker.Worker` loop, connected to the master
+  over a localhost TCP socket with length-prefixed pickle frames.  The
+  child's ``ChunkDone``/``WorkerDone``/``WorkerFailed`` events terminate
+  at the engine's collector thread unchanged — the engine cannot tell the
+  difference, which is the point;
+* :class:`FaultyTransport` — :class:`SocketTransport` plus a seeded chaos
+  layer injecting message drop / duplication / delay / reorder, forced
+  connection drops, and mid-chunk worker SIGKILL.
+
+Robustness machinery (socket transport):
+
+* **Heartbeats** — each child runs a heartbeat pump that also carries its
+  busy/idle/backlog stats and flushes its local trace buffer.  The pump
+  goes *silent* the moment the local worker fail-stops (injected
+  ``s == 0``), so the paper's §4.4 silence semantics extend to the wire.
+* **Fail-stop verdicts** — a master-side monitor feeds per-worker
+  liveness (heartbeat freshness, process aliveness, reconnect grace) to a
+  dedicated :class:`~repro.runtime.elastic.FailureDetector`; a verdict
+  fences the worker (kill + refuse reconnect) and injects a synthetic
+  ``WorkerFailed`` that the collector broadcasts to every live round —
+  the normal ``_failover_dispatch`` path completes the round.
+* **Reconnect + backoff** — a child that loses its socket reconnects
+  with exponential backoff; the master grants a grace window before
+  silence counts toward a verdict, re-attaches the connection, and the
+  child re-delivers events produced while disconnected.
+* **Clock rebasing** — remote events and forwarded ``TraceRecord``s are
+  worker-clock-stamped; the master estimates each worker's clock offset
+  (min over handshake/heartbeat samples of ``recv_time - worker_time``)
+  and rebases, so one ``engine.dump_trace`` renders a single coherent
+  Perfetto timeline across processes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import logging
+import multiprocessing as mp
+import os
+import pickle
+import queue
+import random
+import socket
+import struct
+import threading
+import time
+from typing import (Any, Callable, Dict, List, Optional, Protocol, Sequence,
+                    Set, Tuple)
+
+import numpy as np
+
+from repro.cluster import obs
+from repro.cluster.injectors import TracedInjector
+from repro.cluster.obs import MetricsRegistry, Tracer
+from repro.cluster.worker import (ChunkDone, ChunkTask, Worker, WorkerDone,
+                                  WorkerFailed, numpy_backend)
+from repro.runtime.elastic import FailureDetector
+
+__all__ = ["Transport", "InProcTransport", "SocketTransport",
+           "FaultyTransport", "ChaosConfig", "RemoteWorkerEndpoint",
+           "encode_frame", "decode_frame"]
+
+logger = logging.getLogger("repro.cluster.transport")
+
+
+# ---------------------------------------------------------------------------
+# framing: length-prefixed pickle
+# ---------------------------------------------------------------------------
+
+_HDR = struct.Struct("!I")
+
+
+def encode_frame(obj) -> bytes:
+    """Length-prefixed pickle frame.  Bitwise-faithful for ndarrays:
+    pickle serializes the exact buffer bytes, so a float64 payload decodes
+    bit-identically (the wire never rounds)."""
+    payload = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+    return _HDR.pack(len(payload)) + payload
+
+
+def decode_frame(data: bytes) -> Tuple[Any, int]:
+    """Decode one frame from ``data``; returns (object, bytes consumed)."""
+    if len(data) < _HDR.size:
+        raise ValueError("short frame: no length header")
+    (n,) = _HDR.unpack(data[:_HDR.size])
+    end = _HDR.size + n
+    if len(data) < end:
+        raise ValueError(f"short frame: need {end} bytes, have {len(data)}")
+    return pickle.loads(data[_HDR.size:end]), end
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise ConnectionError("peer closed")
+        buf.extend(chunk)
+    return bytes(buf)
+
+
+def _recv_frame(sock: socket.socket) -> Tuple[Any, int]:
+    (n,) = _HDR.unpack(_recv_exact(sock, _HDR.size))
+    return pickle.loads(_recv_exact(sock, n)), n + _HDR.size
+
+
+# ---------------------------------------------------------------------------
+# wire messages
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Hello:                       # child -> master, first frame per conn
+    worker_id: int
+    pid: int
+    t_worker: float                 # child perf_counter (clock sample)
+
+
+@dataclasses.dataclass
+class _HelloAck:                    # master -> child
+    t_master: float
+    trace_enabled: bool
+    hb_interval: float
+
+
+@dataclasses.dataclass
+class _InstallShard:
+    shard_id: str
+    rows: np.ndarray
+
+
+@dataclasses.dataclass
+class _DropShard:
+    shard_id: str
+
+
+@dataclasses.dataclass
+class _SubmitTask:
+    task_id: int
+    round_id: int
+    iteration: int
+    shard_id: str
+    chunks: List[Tuple[int, int, int]]
+    x: np.ndarray
+    row_cost: float
+
+
+@dataclasses.dataclass
+class _SubmitAck:                   # child -> master: submit received
+    task_id: int
+
+
+@dataclasses.dataclass
+class _CancelTask:
+    task_id: int
+
+
+@dataclasses.dataclass
+class _RetractReq:
+    req_id: int
+    round_id: int
+    chunk_ids: Tuple[int, ...]
+    limit: Optional[int]
+
+
+@dataclasses.dataclass
+class _RetractReply:
+    req_id: int
+    taken: List[int]
+
+
+@dataclasses.dataclass
+class _Promote:
+    round_id: int
+
+
+@dataclasses.dataclass
+class _Stop:
+    pass
+
+
+@dataclasses.dataclass
+class _Heartbeat:                   # child -> master, every hb_interval
+    worker_id: int
+    seq: int
+    t_worker: float                 # child perf_counter (clock sample)
+    busy_s: float
+    idle_s: float
+    retracted_total: int
+    backlog: int
+    backlog_by_round: Dict[int, int]
+    idle: bool
+
+
+@dataclasses.dataclass
+class _EventMsg:                    # child -> master: one worker event
+    event: Any                      # ChunkDone | WorkerDone | WorkerFailed
+    seq: int = 0                    # per-child monotone id (at-least-once)
+
+
+@dataclasses.dataclass
+class _EventAck:                    # master -> child: cumulative event ack
+    cum_seq: int                    # all seqs <= cum_seq are safe to drop
+
+
+@dataclasses.dataclass
+class _TraceBatch:                  # child -> master: forwarded TraceRecords
+    worker_id: int
+    records: List
+
+
+#: control-plane messages the chaos layer never touches — losing one is
+#: not a fault the §4.3/§4.4 machinery is meant to absorb (a dropped
+#: shard install is a provisioning bug, not a straggler), the retract
+#: RPC degrades safely on its own timeout without needing injected loss,
+#: and the ACK messages are the *recovery* half of at-least-once delivery
+#: (chaos attacks the payload message itself; attacking an ack too would
+#: only turn loss into duplication, which dup already covers)
+_PROTECTED = (_Hello, _HelloAck, _InstallShard, _DropShard, _Stop,
+              _RetractReq, _RetractReply, _SubmitAck, _EventAck)
+
+
+# ---------------------------------------------------------------------------
+# Transport protocol + in-process implementation
+# ---------------------------------------------------------------------------
+
+class Transport(Protocol):
+    """Builds and owns the engine's worker pool."""
+
+    kind: str
+
+    def start(self, cfg, events: "queue.Queue", injector, compute,
+              tracer: Tracer, registry: MetricsRegistry) -> List:
+        """Create the pool; returns worker-shaped objects, one per slot."""
+        ...
+
+    def shutdown(self) -> None:
+        """Tear the pool down (idempotent)."""
+        ...
+
+    def round_retired(self, round_id: int) -> None:
+        """Round bookkeeping hook: the engine retired ``round_id``."""
+        ...
+
+
+class InProcTransport:
+    """The original thread pool: workers share the master's event queue.
+
+    Kept as the default and as the deterministic test double — message
+    delivery is exact, ordered, and zero-copy.
+    """
+
+    kind = "inproc"
+
+    def __init__(self):
+        self.workers: List[Worker] = []
+
+    def start(self, cfg, events, injector, compute, tracer, registry):
+        self.workers = [Worker(w, events, injector, compute, tracer=tracer)
+                        for w in range(cfg.n_workers)]
+        for w in self.workers:
+            w.start()
+        return self.workers
+
+    def shutdown(self) -> None:
+        for w in self.workers:
+            w.abort()
+        for w in self.workers:
+            w.join(timeout=10.0)
+
+    def round_retired(self, round_id: int) -> None:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# chaos configuration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ChaosConfig:
+    """Seeded fault schedule for :class:`FaultyTransport`.
+
+    Per-message fault draws come from one ``random.Random(seed ^ worker)``
+    per worker, so the decision *schedule* is seed-determined (exact
+    interleaving across workers still depends on wall-clock arrival
+    order).  ``kill_worker`` SIGKILLs that worker's process after its
+    ``kill_after_chunks``-th delivered chunk result — a mid-round
+    fail-stop the §4.4 heartbeat monitor must catch.  ``drop_conn_worker``
+    force-closes that worker's socket instead (the process survives),
+    exercising the reconnect/backoff path.
+    """
+
+    seed: int = 0
+    p_drop: float = 0.0
+    p_dup: float = 0.0
+    p_delay: float = 0.0
+    delay_range: Tuple[float, float] = (0.001, 0.02)
+    p_reorder: float = 0.0
+    reorder_range: Tuple[float, float] = (0.002, 0.01)
+    kill_worker: Optional[int] = None
+    kill_after_chunks: int = 3
+    drop_conn_worker: Optional[int] = None
+    drop_conn_after_chunks: int = 3
+
+    def __post_init__(self):
+        for name in ("p_drop", "p_dup", "p_delay", "p_reorder"):
+            p = getattr(self, name)
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"ChaosConfig.{name} must be a "
+                                 f"probability in [0, 1], got {p!r}")
+        for name in ("delay_range", "reorder_range"):
+            lo, hi = getattr(self, name)
+            if not 0.0 <= lo <= hi:
+                raise ValueError(f"ChaosConfig.{name} must satisfy "
+                                 f"0 <= lo <= hi, got ({lo!r}, {hi!r})")
+
+
+class _DelayScheduler(threading.Thread):
+    """Min-heap timer thread that runs delayed chaos deliveries."""
+
+    def __init__(self):
+        super().__init__(name="chaos-scheduler", daemon=True)
+        self._cv = threading.Condition()
+        self._heap: List[Tuple[float, int, Callable[[], None]]] = []
+        self._seq = 0
+        self._stopped = False
+
+    def schedule(self, delay_s: float, fn: Callable[[], None]) -> None:
+        with self._cv:
+            heapq.heappush(self._heap,
+                           (time.perf_counter() + max(delay_s, 0.0),
+                            self._seq, fn))
+            self._seq += 1
+            self._cv.notify()
+
+    def stop(self) -> None:
+        with self._cv:
+            self._stopped = True
+            self._cv.notify()
+
+    def run(self) -> None:
+        while True:
+            with self._cv:
+                while not self._stopped:
+                    now = time.perf_counter()
+                    if self._heap and self._heap[0][0] <= now:
+                        break
+                    self._cv.wait(self._heap[0][0] - now
+                                  if self._heap else None)
+                if self._stopped:
+                    return
+                _, _, fn = heapq.heappop(self._heap)
+            try:
+                fn()
+            except Exception:       # a chaos mishap must not kill delivery
+                logger.exception("chaos-delayed delivery failed")
+
+
+class _Chaos:
+    """Master-side fault injector for one :class:`SocketTransport`.
+
+    Routed around every non-protected message in both directions: rx
+    (child → master, after the frame is parsed) and tx (master → child,
+    instead of the raw send).  Faults are drop / duplicate / delay /
+    reorder (a short hold that lets later messages overtake); triggers
+    fire the SIGKILL / connection-drop events off the victim's delivered
+    chunk count.
+    """
+
+    def __init__(self, cfg: ChaosConfig, transport: "SocketTransport"):
+        self.cfg = cfg
+        self.transport = transport
+        self._rngs = [random.Random((cfg.seed << 8) ^ w)
+                      for w in range(transport.n_workers)]
+        self._locks = [threading.Lock() for _ in range(transport.n_workers)]
+        self._sched = _DelayScheduler()
+        self._sched.start()
+        self._chunks_seen: Dict[int, int] = {}
+        self._killed = False
+        self._conn_dropped = False
+        self._trig_lock = threading.Lock()
+
+    def stop(self) -> None:
+        self._sched.stop()
+
+    # -- fault draw --------------------------------------------------------
+    def _decide(self, worker: int) -> Tuple[str, float]:
+        c = self.cfg
+        with self._locks[worker]:
+            rng = self._rngs[worker]
+            r = rng.random()
+            if r < c.p_drop:
+                return "drop", 0.0
+            r -= c.p_drop
+            if r < c.p_dup:
+                return "dup", 0.0
+            r -= c.p_dup
+            if r < c.p_delay:
+                return "delay", rng.uniform(*c.delay_range)
+            r -= c.p_delay
+            if r < c.p_reorder:
+                return "reorder", rng.uniform(*c.reorder_range)
+            return "pass", 0.0
+
+    def _note(self, action: str, worker: int, direction: str) -> None:
+        t = self.transport
+        t._m_chaos.labels(transport=t.kind, action=action).inc()
+        if t.tracer is not None and t.tracer.enabled:
+            t.tracer.emit(obs.KIND_CHAOS, worker=worker, action=action,
+                          direction=direction)
+        logger.debug("chaos: %s %s message of worker %d",
+                     action, direction, worker)
+
+    # -- kill / conn-drop triggers ----------------------------------------
+    def _check_triggers(self, worker: int, msg) -> None:
+        c = self.cfg
+        if not isinstance(msg, _EventMsg) or \
+                not isinstance(msg.event, ChunkDone):
+            return
+        with self._trig_lock:
+            seen = self._chunks_seen.get(worker, 0) + 1
+            self._chunks_seen[worker] = seen
+            kill = (not self._killed and c.kill_worker == worker
+                    and seen >= c.kill_after_chunks)
+            drop = (not self._conn_dropped and c.drop_conn_worker == worker
+                    and seen >= c.drop_conn_after_chunks)
+            self._killed = self._killed or kill
+            self._conn_dropped = self._conn_dropped or drop
+        if kill:
+            self._note("kill", worker, "proc")
+            self.transport._kill_child(worker, reason="chaos SIGKILL")
+        if drop:
+            self._note("conn_drop", worker, "rx")
+            self.transport.endpoints[worker]._force_close()
+
+    # -- routing -----------------------------------------------------------
+    def route(self, worker: int, msg, deliver: Callable[[], None],
+              direction: str) -> None:
+        """Apply the schedule to one message; ``deliver`` performs the
+        real delivery (master-side handle, or the raw socket send)."""
+        if isinstance(msg, _PROTECTED):
+            deliver()
+            return
+        action, delay = self._decide(worker)
+        if action == "pass":
+            deliver()
+        elif action == "drop":
+            self._note("drop", worker, direction)
+        elif action == "dup":
+            self._note("dup", worker, direction)
+            deliver()
+            deliver()
+        else:                       # delay / reorder: both are a late
+            self._note(action, worker, direction)  # delivery; reorder's
+            self._sched.schedule(delay, deliver)   # hold is short enough
+            return                  # for in-flight traffic to overtake
+        # triggers count DELIVERED chunks (a dropped result can't be the
+        # kill's cause — the victim must have visibly produced work first)
+        if action in ("pass", "dup"):
+            self._check_triggers(worker, msg)
+
+
+# ---------------------------------------------------------------------------
+# master side: remote worker endpoint
+# ---------------------------------------------------------------------------
+
+class RemoteWorkerEndpoint:
+    """Master-side proxy for one worker process — worker-shaped.
+
+    Implements the same surface the engine uses on an in-process
+    :class:`~repro.cluster.worker.Worker` (dispatch, retraction,
+    promotion, shard management, stats), backed by the socket.  Fire-and-
+    forget sends swallow connection errors: a lost message is exactly the
+    failure mode the §4.3/§4.4 machinery recovers from, and the reader /
+    monitor threads own the reconnect-or-verdict decision.
+    """
+
+    def __init__(self, worker_id: int, transport: "SocketTransport"):
+        self.worker_id = worker_id
+        self.transport = transport
+        self.shards: Dict[str, np.ndarray] = {}
+        self.dead = False
+        self.proc: Optional[mp.process.BaseProcess] = None
+        self.pid: Optional[int] = None
+        self._lock = threading.Lock()       # conn swap + offset + hb stats
+        self._tx_lock = threading.Lock()    # frame writes
+        self._conn: Optional[socket.socket] = None
+        self.connected = False
+        self.connected_evt = threading.Event()   # first successful attach
+        self._ever_connected = False
+        self.disconnect_t = 0.0
+        self.last_seen = 0.0                # master clock, any rx message
+        self._offset: Optional[float] = None
+        # task bookkeeping: engine task object <-> wire task id
+        self._task_seq = itertools.count(1)
+        self._task_meta: Dict[int, Tuple[int, ChunkTask]] = {}
+        self._task_ids: Dict[int, int] = {}      # id(task) -> task_id
+        self._task_lock = threading.Lock()
+        # at-least-once event RECEIPT: the child numbers its events with a
+        # process-lifetime sequence; we dedup retransmits/dups here and ack
+        # the highest contiguous seq so the child can drop its buffer
+        self._ev_floor = 0               # all seqs <= floor delivered
+        self._ev_buf: Dict[int, object] = {}  # out-of-order events held back
+        self._rx_thread: Optional[threading.Thread] = None
+        # at-least-once submit delivery: tid -> [msg, last_send_t, attempts];
+        # entries clear on the child's _SubmitAck, and the transport monitor
+        # retransmits overdue ones (lost to chaos OR to a disconnect window).
+        # The child dedups by task id; a duplicate that slips through anyway
+        # just recomputes — duplicate results are idempotent master-side.
+        self._unacked: Dict[int, List] = {}
+        # sync retract RPC slots
+        self._rpc_seq = itertools.count(1)
+        self._rpcs: Dict[int, Tuple[threading.Event, List[List[int]]]] = {}
+        self._rpc_lock = threading.Lock()
+        # heartbeat-carried stats (stale by <= hb_interval; good enough
+        # for steal sizing and pool instrumentation)
+        self.busy_s = 0.0
+        self.idle_s = 0.0
+        self.retracted_total = 0
+        self._hb_backlog = 0
+        self._hb_backlog_by_round: Dict[int, int] = {}
+        self._hb_idle = True
+
+    # -- clock -------------------------------------------------------------
+    @property
+    def offset(self) -> float:
+        off = self._offset
+        return 0.0 if off is None else off
+
+    def _sample_clock(self, t_worker: float, recv_t: float) -> None:
+        # transit is nonnegative, so recv_t - t_worker over-estimates the
+        # true offset by the (varying) transit time: the min over samples
+        # converges onto the fastest observed path
+        off = recv_t - t_worker
+        with self._lock:
+            if self._offset is None or off < self._offset:
+                self._offset = off
+
+    # -- connection lifecycle ---------------------------------------------
+    def attach(self, conn: socket.socket, hello: _Hello,
+               recv_t: float) -> None:
+        t = self.transport
+        refused = False
+        with self._lock:
+            if self.dead or t._closing:
+                refused = True
+            else:
+                old = self._conn
+                self._conn = conn
+                reconnect = self._ever_connected
+                self._ever_connected = True
+                self.connected = True
+                self.pid = hello.pid
+                self.last_seen = recv_t
+        if refused:
+            try:
+                conn.sendall(encode_frame(_Stop()))
+                conn.close()
+            except OSError:
+                pass
+            return
+        self._sample_clock(hello.t_worker, recv_t)
+        if old is not None and old is not conn:
+            try:
+                old.close()
+            except OSError:
+                pass
+        self._raw_send(_HelloAck(
+            t_master=time.perf_counter(),
+            trace_enabled=t.tracer is not None and t.tracer.enabled,
+            hb_interval=t.hb_interval))
+        if reconnect:
+            t._m_reconnects.labels(transport=t.kind).inc()
+            if t.tracer is not None and t.tracer.enabled:
+                t.tracer.emit(obs.KIND_RECONNECT, worker=self.worker_id)
+            logger.info("worker %d reconnected (pid %d)",
+                        self.worker_id, hello.pid)
+        self.connected_evt.set()
+        self._rx_thread = threading.Thread(
+            target=self._read_loop, args=(conn,),
+            name=f"transport-rx-{self.worker_id}", daemon=True)
+        self._rx_thread.start()
+
+    def _on_conn_lost(self, conn: socket.socket) -> None:
+        t = self.transport
+        with self._lock:
+            if self._conn is not conn:
+                return                      # an old connection's reader
+            self._conn = None
+            self.connected = False
+            self.disconnect_t = time.perf_counter()
+        try:
+            conn.close()
+        except OSError:
+            pass
+        if not t._closing:
+            if t.tracer is not None and t.tracer.enabled:
+                t.tracer.emit(obs.KIND_CONN_LOST, worker=self.worker_id)
+            logger.warning("worker %d: connection lost", self.worker_id)
+
+    def _force_close(self) -> None:
+        """Chaos hook: drop the live connection out from under the child."""
+        with self._lock:
+            conn = self._conn
+        if conn is not None:
+            try:
+                conn.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+
+    def _read_loop(self, conn: socket.socket) -> None:
+        t = self.transport
+        while True:
+            try:
+                msg, nbytes = _recv_frame(conn)
+            except (OSError, EOFError, ConnectionError, pickle.PickleError):
+                self._on_conn_lost(conn)
+                return
+            recv_t = time.perf_counter()
+            t._m_msgs_rx.inc()
+            t._m_bytes_rx.inc(nbytes)
+            with self._lock:
+                self.last_seen = recv_t
+            if t.chaos is not None:
+                t.chaos.route(self.worker_id, msg,
+                              lambda m=msg, r=recv_t: self._handle(m, r),
+                              direction="rx")
+            else:
+                self._handle(msg, recv_t)
+
+    # -- inbound handling --------------------------------------------------
+    def _deliver(self, ev) -> None:
+        # called with self._lock held on the sequenced path (keeps puts
+        # from different chaos-timer threads in seq order); must not take
+        # the lock itself
+        off = self.offset
+        # rebase worker-stamped clocks onto the master's perf_counter
+        # axis so §4.3 deadlines, starvation refs, and the trace all
+        # share one timeline
+        ev = dataclasses.replace(ev, t=ev.t + off,
+                                 t_start=ev.t_start + off
+                                 if ev.t_start else 0.0)
+        if isinstance(ev, WorkerFailed):
+            self.dead = True
+        self.transport.events.put(ev)
+
+    def _handle(self, msg, recv_t: float) -> None:
+        t = self.transport
+        if isinstance(msg, _EventMsg):
+            if msg.seq:
+                # in-ORDER at-least-once delivery: the engine's collection
+                # loop inherits the in-process queue's FIFO guarantee (e.g.
+                # a WorkerDone never overtakes the ChunkDones it summarises
+                # — §4.3 sets finish_t off exactly that ordering), so hold
+                # out-of-order arrivals (chaos delay/reorder, retransmit
+                # racing the original) until the gap fills.  The ack is
+                # cumulative: the child keeps retransmitting the missing
+                # seq, which is what plugs the gap.
+                with self._lock:
+                    dup = (msg.seq <= self._ev_floor
+                           or msg.seq in self._ev_buf)
+                    if not dup:
+                        self._ev_buf[msg.seq] = msg.event
+                        while self._ev_floor + 1 in self._ev_buf:
+                            self._ev_floor += 1
+                            self._deliver(self._ev_buf.pop(self._ev_floor))
+                    cum = self._ev_floor
+                self._raw_send(_EventAck(cum))
+                if dup:
+                    return          # retransmit/chaos-dup of a seen event
+            else:
+                self._deliver(msg.event)
+        elif isinstance(msg, _Heartbeat):
+            self._sample_clock(msg.t_worker, recv_t)
+            with self._lock:
+                self.busy_s = msg.busy_s
+                self.idle_s = msg.idle_s
+                self.retracted_total = msg.retracted_total
+                self._hb_backlog = msg.backlog
+                self._hb_backlog_by_round = msg.backlog_by_round
+                self._hb_idle = msg.idle
+        elif isinstance(msg, _TraceBatch):
+            if t.tracer is not None and t.tracer.enabled:
+                t.tracer.absorb(msg.records, self.offset)
+        elif isinstance(msg, _SubmitAck):
+            with self._task_lock:
+                self._unacked.pop(msg.task_id, None)
+        elif isinstance(msg, _RetractReply):
+            with self._rpc_lock:
+                slot = self._rpcs.pop(msg.req_id, None)
+            if slot is not None:
+                evt, box = slot
+                box.append(list(msg.taken))
+                evt.set()
+        elif isinstance(msg, _Hello):
+            # re-hello on an existing conn is a protocol error; ignore
+            logger.debug("worker %d: unexpected re-hello", self.worker_id)
+        else:
+            logger.debug("worker %d: unknown message %r",
+                         self.worker_id, type(msg).__name__)
+
+    # -- outbound ----------------------------------------------------------
+    def _raw_send(self, msg) -> bool:
+        with self._lock:
+            conn = self._conn
+        if conn is None:
+            return False
+        frame = encode_frame(msg)
+        try:
+            with self._tx_lock:
+                conn.sendall(frame)
+        except OSError:
+            return False
+        t = self.transport
+        t._m_msgs_tx.inc()
+        t._m_bytes_tx.inc(len(frame))
+        return True
+
+    def _send(self, msg) -> None:
+        t = self.transport
+        if t.chaos is not None:
+            t.chaos.route(self.worker_id, msg,
+                          lambda m=msg: self._raw_send(m), direction="tx")
+        else:
+            self._raw_send(msg)
+
+    # -- worker-shaped surface (what the engine calls) ---------------------
+    def install_shard(self, shard_id: str, rows: np.ndarray) -> None:
+        rows = np.ascontiguousarray(rows, dtype=np.float64)
+        self.shards[shard_id] = rows
+        self._raw_send(_InstallShard(shard_id, rows))
+
+    def drop_shard(self, shard_id: str) -> None:
+        self.shards.pop(shard_id, None)
+        self._raw_send(_DropShard(shard_id))
+
+    def submit(self, task: ChunkTask) -> None:
+        tid = next(self._task_seq)
+        msg = _SubmitTask(tid, task.round_id, task.iteration,
+                          task.shard_id, list(task.chunks),
+                          np.asarray(task.x), task.row_cost)
+        with self._task_lock:
+            self._task_meta[tid] = (task.round_id, task)
+            self._task_ids[id(task)] = tid
+            self._unacked[tid] = [msg, time.perf_counter(), 0]
+        self._send(msg)
+
+    def _resend_unacked(self, now: float) -> None:
+        """Monitor tick: retransmit submits the child never acked."""
+        t = self.transport
+        if self.dead:
+            with self._task_lock:
+                self._unacked.clear()
+            return
+        due = []
+        with self._task_lock:
+            for tid, rec in list(self._unacked.items()):
+                if now - rec[1] < t.ack_timeout:
+                    continue
+                if rec[2] >= t.max_submit_attempts or \
+                        tid not in self._task_meta or \
+                        self._task_meta[tid][1].cancel.is_set():
+                    del self._unacked[tid]
+                    continue
+                rec[1] = now
+                rec[2] += 1
+                due.append(rec[0])
+        for msg in due:
+            logger.debug("worker %d: retransmitting submit %d",
+                         self.worker_id, msg.task_id)
+            self._send(msg)
+
+    def cancel_task(self, task: ChunkTask) -> None:
+        task.cancel.set()           # keep master-side bookkeeping coherent
+        with self._task_lock:
+            tid = self._task_ids.get(id(task))
+            if tid is not None:
+                self._unacked.pop(tid, None)
+        if tid is not None:
+            self._send(_CancelTask(tid))
+
+    def retract(self, round_id: int, chunk_ids: Sequence[int],
+                limit: Optional[int] = None) -> List[int]:
+        """Synchronous retract RPC; degrades to ``[]`` on timeout/loss.
+
+        Safe degradation: an unanswered retract means the chunks simply
+        stay with the donor — nothing is double-counted, and §4.3 waves
+        still recover the round if the donor never delivers.
+        """
+        if self.dead or not self.connected:
+            return []
+        req_id = next(self._rpc_seq)
+        evt = threading.Event()
+        box: List[List[int]] = []
+        with self._rpc_lock:
+            self._rpcs[req_id] = (evt, box)
+        self._send(_RetractReq(req_id, round_id, tuple(chunk_ids), limit))
+        if not evt.wait(self.transport.rpc_timeout):
+            with self._rpc_lock:
+                self._rpcs.pop(req_id, None)
+            return []
+        return box[0] if box else []
+
+    def promote_round(self, round_id: int) -> int:
+        self._send(_Promote(round_id))
+        return self._hb_backlog_by_round.get(round_id, 0)
+
+    def backlog(self, round_id: Optional[int] = None) -> int:
+        with self._lock:
+            if round_id is None:
+                return self._hb_backlog
+            return self._hb_backlog_by_round.get(round_id, 0)
+
+    def idle(self) -> bool:
+        # never steal INTO a disconnected or dead worker; heartbeat
+        # staleness (<= hb_interval) only delays steals, never corrupts
+        # accounting — retract() on the donor side stays authoritative
+        with self._lock:
+            return self.connected and not self.dead and self._hb_idle
+
+    def idle_seconds(self, now: Optional[float] = None) -> float:
+        with self._lock:
+            return self.idle_s
+
+    def stop(self) -> None:
+        self._raw_send(_Stop())
+
+    def abort(self) -> None:
+        self._raw_send(_Stop())
+
+    def round_retired(self, round_id: int) -> None:
+        with self._task_lock:
+            stale = [tid for tid, (rid, _) in self._task_meta.items()
+                     if rid == round_id]
+            for tid in stale:
+                _, task = self._task_meta.pop(tid)
+                self._task_ids.pop(id(task), None)
+                self._unacked.pop(tid, None)
+        with self._lock:
+            self._hb_backlog_by_round.pop(round_id, None)
+
+
+# ---------------------------------------------------------------------------
+# master side: the socket transport
+# ---------------------------------------------------------------------------
+
+class SocketTransport:
+    """Process-based worker pool over localhost TCP.
+
+    ``start`` spawns one child process per worker (``multiprocessing``
+    ``spawn`` context — no forked locks), waits for every child's
+    handshake, and returns :class:`RemoteWorkerEndpoint` proxies.  The
+    monitor thread then drives heartbeat-based fail-stop detection for
+    the life of the pool.
+    """
+
+    kind = "proc"
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0,
+                 hb_interval: float = 0.1, hb_miss: int = 5,
+                 dead_after: int = 3, rpc_timeout: float = 1.0,
+                 reconnect_backoff: float = 0.05, reconnect_tries: int = 5,
+                 connect_timeout: float = 60.0, mp_method: str = "spawn",
+                 ack_timeout: Optional[float] = None,
+                 max_submit_attempts: int = 10,
+                 chaos: Optional[ChaosConfig] = None):
+        self.host = host
+        self.port = port
+        self.hb_interval = hb_interval
+        self.hb_miss = hb_miss
+        self.dead_after = dead_after
+        self.rpc_timeout = rpc_timeout
+        self.reconnect_backoff = reconnect_backoff
+        self.reconnect_tries = reconnect_tries
+        self.connect_timeout = connect_timeout
+        self.mp_method = mp_method
+        # at-least-once dispatch: a submit unacked for ack_timeout is
+        # retransmitted (the child dedups), up to max_submit_attempts
+        self.ack_timeout = (ack_timeout if ack_timeout is not None
+                            else max(4 * hb_interval, 0.2))
+        self.max_submit_attempts = max_submit_attempts
+        self.chaos_cfg = chaos
+        self.chaos: Optional[_Chaos] = None
+        self.n_workers = 0
+        self.events: Optional["queue.Queue"] = None
+        self.tracer: Optional[Tracer] = None
+        self.endpoints: List[RemoteWorkerEndpoint] = []
+        self.procs: List[mp.process.BaseProcess] = []
+        self._lsock: Optional[socket.socket] = None
+        self._closing = False
+        self._closed = False
+        self._verdicted: Set[int] = set()
+        self._monitor: Optional[threading.Thread] = None
+        self._accept_thread: Optional[threading.Thread] = None
+        #: grace budget for a reconnecting child: the sum of its backoff
+        #: schedule plus one extra second of slack
+        self.reconnect_window = sum(
+            reconnect_backoff * (2 ** i) for i in range(reconnect_tries)
+        ) + 1.0
+
+    # -- metrics -----------------------------------------------------------
+    def _declare_metrics(self, registry: MetricsRegistry) -> None:
+        self.registry = registry
+        msgs = registry.counter(
+            "s2c2_transport_messages_total", "transport frames",
+            ("transport", "direction"))
+        by = registry.counter(
+            "s2c2_transport_bytes_total", "transport frame bytes",
+            ("transport", "direction"))
+        self._m_msgs_tx = msgs.labels(transport=self.kind, direction="tx")
+        self._m_msgs_rx = msgs.labels(transport=self.kind, direction="rx")
+        self._m_bytes_tx = by.labels(transport=self.kind, direction="tx")
+        self._m_bytes_rx = by.labels(transport=self.kind, direction="rx")
+        self._m_reconnects = registry.counter(
+            "s2c2_transport_reconnects_total",
+            "worker reconnections accepted", ("transport",))
+        self._m_verdicts = registry.counter(
+            "s2c2_transport_verdicts_total",
+            "heartbeat-silence fail-stop verdicts", ("transport",))
+        self._m_chaos = registry.counter(
+            "s2c2_transport_chaos_total", "injected transport faults",
+            ("transport", "action"))
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self, cfg, events, injector, compute, tracer, registry):
+        self.n_workers = cfg.n_workers
+        self.events = events
+        self.tracer = tracer
+        self._declare_metrics(registry)
+        if self.chaos_cfg is not None:
+            self.chaos = _Chaos(self.chaos_cfg, self)
+
+        lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        lsock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        lsock.bind((self.host, self.port))
+        lsock.listen(2 * cfg.n_workers)
+        self._lsock = lsock
+        addr = lsock.getsockname()
+
+        self.endpoints = [RemoteWorkerEndpoint(w, self)
+                          for w in range(cfg.n_workers)]
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name="transport-accept", daemon=True)
+        self._accept_thread.start()
+
+        # children get the UNWRAPPED injector (the engine's TracedInjector
+        # holds the master's tracer and a lock) and re-wrap with their own
+        # process-local tracer; the compute backend ships as a spec string
+        # for the known unpicklable backends
+        base_injector = getattr(injector, "inner", injector)
+        spec = _compute_spec(compute)
+        ctx = mp.get_context(self.mp_method)
+        for w in range(cfg.n_workers):
+            p = ctx.Process(
+                target=_worker_main,
+                args=(w, addr[0], addr[1], base_injector, spec,
+                      self.hb_interval, self.reconnect_backoff,
+                      self.reconnect_tries),
+                name=f"s2c2-worker-{w}", daemon=True)
+            p.start()
+            self.endpoints[w].proc = p
+            self.procs.append(p)
+
+        deadline = time.perf_counter() + self.connect_timeout
+        for ep in self.endpoints:
+            if not ep.connected_evt.wait(
+                    max(deadline - time.perf_counter(), 0.0)):
+                self.shutdown()
+                raise RuntimeError(
+                    f"worker {ep.worker_id} did not connect within "
+                    f"{self.connect_timeout}s")
+        self._monitor = threading.Thread(
+            target=self._monitor_loop, name="transport-monitor", daemon=True)
+        self._monitor.start()
+        logger.info("socket transport up: %d worker processes on %s:%d",
+                    cfg.n_workers, addr[0], addr[1])
+        return self.endpoints
+
+    def _accept_loop(self) -> None:
+        while not self._closing:
+            try:
+                conn, _ = self._lsock.accept()
+            except OSError:
+                return                  # listening socket closed
+            threading.Thread(target=self._handshake, args=(conn,),
+                             name="transport-handshake",
+                             daemon=True).start()
+
+    def _handshake(self, conn: socket.socket) -> None:
+        try:
+            conn.settimeout(10.0)
+            msg, _ = _recv_frame(conn)
+            conn.settimeout(None)
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        except (OSError, EOFError, ConnectionError, pickle.PickleError):
+            try:
+                conn.close()
+            except OSError:
+                pass
+            return
+        recv_t = time.perf_counter()
+        if not isinstance(msg, _Hello) or \
+                not 0 <= msg.worker_id < self.n_workers:
+            logger.warning("rejecting connection: bad hello %r", msg)
+            conn.close()
+            return
+        self.endpoints[msg.worker_id].attach(conn, msg, recv_t)
+
+    # -- §4.4 over the wire ------------------------------------------------
+    def _monitor_loop(self) -> None:
+        """Feed heartbeat liveness into a dedicated FailureDetector.
+
+        Response vector per tick: 1.0 for a live signal, inf for silence
+        — where silence means a connected worker past ``hb_miss``
+        heartbeat intervals without any message, a dead child process, or
+        a disconnected worker past its reconnect grace window.  The
+        detector's ``dead_after`` consecutive-strike rule then yields the
+        §4.4 fail-stop verdict, exactly as in-engine detection does at
+        round granularity.
+        """
+        det = FailureDetector(self.n_workers, k=1, slack=1.0,
+                              dead_after=self.dead_after)
+        silence = self.hb_miss * self.hb_interval
+        while not self._closing:
+            time.sleep(self.hb_interval)
+            if self._closing:
+                return
+            now = time.perf_counter()
+            for ep in self.endpoints:
+                ep._resend_unacked(now)
+            resp = np.ones(self.n_workers)
+            for ep in self.endpoints:
+                w = ep.worker_id
+                if w in self._verdicted:
+                    resp[w] = np.inf
+                    continue
+                if ep.connected:
+                    if now - ep.last_seen > silence:
+                        resp[w] = np.inf
+                elif ep.proc is not None and not ep.proc.is_alive():
+                    resp[w] = np.inf
+                elif ep._ever_connected and \
+                        now - ep.disconnect_t > self.reconnect_window:
+                    resp[w] = np.inf
+                # else: still connecting / inside the grace window
+            verdict = det.evaluate(resp)
+            for w in sorted(verdict["dead"] - self._verdicted):
+                self._verdicted.add(w)
+                self._issue_verdict(w, now)
+
+    def _issue_verdict(self, w: int, now: float) -> None:
+        ep = self.endpoints[w]
+        ep.dead = True
+        self._m_verdicts.labels(transport=self.kind).inc()
+        if self.tracer is not None and self.tracer.enabled:
+            self.tracer.emit(obs.KIND_FAILSTOP_VERDICT, worker=w,
+                             transport=self.kind, source="heartbeat")
+        logger.warning("worker %d: §4.4 heartbeat verdict — fail-stop "
+                       "(fencing the process)", w)
+        # fence: a verdicted worker must never come back half-alive
+        if ep.proc is not None and ep.proc.is_alive():
+            try:
+                ep.proc.kill()
+            except (OSError, ValueError):
+                pass
+        ep._force_close()
+        # synthetic crash event: the collector broadcasts WorkerFailed to
+        # every live round, which fail over via _failover_dispatch — the
+        # round completes on the survivors instead of waiting out §4.3
+        self.events.put(WorkerFailed(
+            w, -1, now, "transport: heartbeat silence — fail-stop verdict"))
+
+    def _kill_child(self, w: int, reason: str = "") -> None:
+        """SIGKILL a worker process (chaos trigger / verdict fencing)."""
+        ep = self.endpoints[w]
+        logger.warning("killing worker %d process (%s)", w, reason or "-")
+        if ep.proc is not None and ep.proc.is_alive():
+            try:
+                ep.proc.kill()
+            except (OSError, ValueError):
+                pass
+
+    # -- engine hooks ------------------------------------------------------
+    def round_retired(self, round_id: int) -> None:
+        for ep in self.endpoints:
+            ep.round_retired(round_id)
+
+    def shutdown(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self._closing = True
+        if self.chaos is not None:
+            self.chaos.stop()
+        for ep in self.endpoints:
+            ep.stop()               # best-effort _Stop for a clean exit
+        if self._lsock is not None:
+            try:
+                self._lsock.close()
+            except OSError:
+                pass
+        for p in self.procs:
+            p.join(timeout=2.0)
+        for p in self.procs:
+            if p.is_alive():
+                p.kill()
+                p.join(timeout=1.0)
+        # drain the rx threads before closing the conns: the children
+        # flushed their trace tails on _Stop, and those frames sit in the
+        # kernel buffer until each reader hits EOF — joining here makes a
+        # post-shutdown dump_trace complete
+        for ep in self.endpoints:
+            rx = ep._rx_thread
+            if rx is not None and rx is not threading.current_thread():
+                rx.join(timeout=2.0)
+        for ep in self.endpoints:
+            with ep._lock:
+                conn, ep._conn = ep._conn, None
+                ep.connected = False
+            if conn is not None:
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+        if self._monitor is not None:
+            self._monitor.join(timeout=2.0)
+
+
+class FaultyTransport(SocketTransport):
+    """Socket transport with the chaos layer armed (see :class:`ChaosConfig`).
+
+    Composes with the slowdown injectors: the injector throttles *compute*
+    inside the child processes while the chaos layer corrupts the
+    *transport* between them — the two fault planes of the paper's
+    evaluation (stragglers and fail-stops) plus the messaging faults a
+    real deployment adds on top.
+    """
+
+    kind = "proc+chaos"
+
+    def __init__(self, chaos: Optional[ChaosConfig] = None, **kw):
+        super().__init__(chaos=chaos if chaos is not None else ChaosConfig(),
+                         **kw)
+
+
+def _compute_spec(compute):
+    """Picklable description of the compute backend for the children."""
+    if compute is numpy_backend:
+        return "numpy"
+    if type(compute).__name__ == "KernelBackend":
+        # jax handles and locks do not pickle; each child builds its own
+        return "kernel"
+    return compute                  # must be picklable (module-level fn)
+
+
+def _resolve_compute(spec):
+    if spec == "numpy":
+        return numpy_backend
+    if spec == "kernel":
+        from repro.cluster.worker import kernel_backend
+        return kernel_backend()
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# child process
+# ---------------------------------------------------------------------------
+
+class _ChildNode:
+    """One worker process: a real Worker + socket client + pumps.
+
+    Threads: the main thread runs connect/handshake/read (control
+    messages, including the synchronous retract RPC, are served inline);
+    an event pump forwards the worker's events (re-queuing across
+    reconnects so nothing is lost); a heartbeat pump carries liveness +
+    stats + the trace batch — and goes silent once the local worker
+    fail-stops, extending §4.4 silence semantics to the wire.
+    """
+
+    def __init__(self, worker_id: int, host: str, port: int, injector,
+                 compute_spec, hb_interval: float,
+                 reconnect_backoff: float, reconnect_tries: int):
+        self.worker_id = worker_id
+        self.addr = (host, port)
+        self.hb_interval = hb_interval
+        self.reconnect_backoff = reconnect_backoff
+        self.reconnect_tries = reconnect_tries
+        self.events: "queue.Queue" = queue.Queue()
+        self.tracer = Tracer(enabled=False)
+        self.worker = Worker(worker_id, self.events,
+                             TracedInjector(injector, self.tracer),
+                             _resolve_compute(compute_spec),
+                             tracer=self.tracer)
+        self.tasks: "Dict[int, ChunkTask]" = {}
+        self._tasks_lock = threading.Lock()
+        self._sock: Optional[socket.socket] = None
+        self._tx_lock = threading.Lock()
+        self._connected = threading.Event()
+        self._stopping = False
+        # at-least-once event delivery: every outgoing event gets a
+        # process-lifetime seq and stays buffered until the master's
+        # cumulative ack covers it; the heartbeat pump retransmits overdue
+        # entries (lost to chaos or to a disconnect window)
+        self._ev_seq = 0
+        self._ev_unacked: List[List] = []    # [seq, event, last_sent_t]
+        self._ev_lock = threading.Lock()
+
+    # -- tx ----------------------------------------------------------------
+    def _send(self, msg) -> bool:
+        sock = self._sock
+        if sock is None:
+            return False
+        try:
+            with self._tx_lock:
+                sock.sendall(encode_frame(msg))
+            return True
+        except OSError:
+            return False
+
+    # -- connection --------------------------------------------------------
+    def _connect_once(self) -> Optional[socket.socket]:
+        try:
+            s = socket.create_connection(self.addr, timeout=10.0)
+            s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            return s
+        except OSError:
+            return None
+
+    def _connect(self, first: bool) -> bool:
+        """Connect + handshake, with exponential backoff on retries."""
+        delay = self.reconnect_backoff
+        tries = self.reconnect_tries
+        for attempt in range(tries):
+            s = self._connect_once()
+            if s is not None:
+                try:
+                    s.sendall(encode_frame(_Hello(
+                        self.worker_id, os.getpid(), time.perf_counter())))
+                    s.settimeout(10.0)
+                    ack, _ = _recv_frame(s)
+                    s.settimeout(None)
+                except (OSError, EOFError, ConnectionError,
+                        pickle.PickleError):
+                    try:
+                        s.close()
+                    except OSError:
+                        pass
+                    s = None
+                else:
+                    if isinstance(ack, _Stop):
+                        return False        # master refused (verdicted)
+                    if isinstance(ack, _HelloAck):
+                        self.tracer.enabled = ack.trace_enabled
+                        self.hb_interval = ack.hb_interval
+                        self._sock = s
+                        self._connected.set()
+                        return True
+                    s.close()
+                    s = None
+            if attempt + 1 < tries:
+                time.sleep(delay)
+                delay *= 2
+        return False
+
+    # -- pumps -------------------------------------------------------------
+    def _event_pump(self) -> None:
+        while True:
+            ev = self.events.get()
+            if self._stopping:
+                return
+            with self._ev_lock:
+                self._ev_seq += 1
+                seq = self._ev_seq
+                self._ev_unacked.append([seq, ev, time.perf_counter()])
+            # best-effort first send; loss (chaos, disconnect window) is
+            # repaired by the retransmit sweep until the master's ack lands
+            self._send(_EventMsg(ev, seq))
+
+    def _retransmit_events(self, now: float) -> None:
+        timeout = max(4 * self.hb_interval, 0.2)
+        due: List[Tuple[int, Any]] = []
+        with self._ev_lock:
+            for rec in self._ev_unacked:
+                if now - rec[2] >= timeout:
+                    rec[2] = now
+                    due.append((rec[0], rec[1]))
+        for seq, ev in due:
+            self._send(_EventMsg(ev, seq))
+
+    def _heartbeat_pump(self) -> None:
+        seq = 0
+        while not self._stopping:
+            time.sleep(self.hb_interval)
+            w = self.worker
+            if w.dead:
+                # fail-stop is SILENCE: stop heartbeating (and abandoning
+                # retransmits) so the master's §4.4 monitor sees exactly
+                # what the paper's model says — nothing
+                continue
+            if not self._connected.is_set():
+                continue
+            now = time.perf_counter()
+            self._retransmit_events(now)
+            if self.tracer.enabled:
+                records = self.tracer.drain()
+                if records:
+                    self._send(_TraceBatch(self.worker_id, records))
+            seq += 1
+            self._send(_Heartbeat(
+                worker_id=self.worker_id, seq=seq, t_worker=now,
+                busy_s=w.busy_s, idle_s=w.idle_seconds(now),
+                retracted_total=w.retracted_total,
+                backlog=w.backlog(),
+                backlog_by_round=w.backlog_by_round(),
+                idle=w.idle()))
+
+    # -- control -----------------------------------------------------------
+    def _handle(self, msg) -> None:
+        w = self.worker
+        if isinstance(msg, _SubmitTask):
+            # ack first (protected from chaos), then dedup: a retransmit
+            # of a submit we already queued/ran must not recompute
+            self._send(_SubmitAck(msg.task_id))
+            with self._tasks_lock:
+                if msg.task_id in self.tasks:
+                    return
+            x = np.asarray(msg.x)
+            # round snapshots are immutable on the master; restore the
+            # flag so shard-aware backends may identity-key device copies
+            x.setflags(write=False)
+            task = ChunkTask(round_id=msg.round_id,
+                             iteration=msg.iteration,
+                             shard_id=msg.shard_id,
+                             chunks=list(msg.chunks), x=x,
+                             row_cost=msg.row_cost,
+                             cancel=threading.Event())
+            with self._tasks_lock:
+                self.tasks[msg.task_id] = task
+                while len(self.tasks) > 4096:   # bound the id map
+                    self.tasks.pop(next(iter(self.tasks)))
+            w.submit(task)
+        elif isinstance(msg, _CancelTask):
+            with self._tasks_lock:
+                task = self.tasks.pop(msg.task_id, None)
+            if task is not None:
+                task.cancel.set()
+        elif isinstance(msg, _RetractReq):
+            taken = w.retract(msg.round_id, list(msg.chunk_ids),
+                              limit=msg.limit)
+            self._send(_RetractReply(msg.req_id, taken))
+        elif isinstance(msg, _EventAck):
+            with self._ev_lock:
+                self._ev_unacked = [r for r in self._ev_unacked
+                                    if r[0] > msg.cum_seq]
+        elif isinstance(msg, _Promote):
+            w.promote_round(msg.round_id)
+        elif isinstance(msg, _InstallShard):
+            w.install_shard(msg.shard_id, msg.rows)
+        elif isinstance(msg, _DropShard):
+            w.drop_shard(msg.shard_id)
+        elif isinstance(msg, _Stop):
+            # flush the trace tail first: the master's reader drains this
+            # frame before EOF, so a post-shutdown dump_trace still shows
+            # the final worker spans
+            if self.tracer.enabled:
+                records = self.tracer.drain()
+                if records:
+                    self._send(_TraceBatch(self.worker_id, records))
+            self._stopping = True
+        else:
+            logger.debug("worker %d: unknown control %r",
+                         self.worker_id, type(msg).__name__)
+
+    # -- main --------------------------------------------------------------
+    def run(self) -> int:
+        self.worker.start()
+        if not self._connect(first=True):
+            return 1
+        threading.Thread(target=self._event_pump, name="event-pump",
+                         daemon=True).start()
+        threading.Thread(target=self._heartbeat_pump, name="hb-pump",
+                         daemon=True).start()
+        while True:
+            sock = self._sock
+            try:
+                while not self._stopping:
+                    msg, _ = _recv_frame(sock)
+                    self._handle(msg)
+            except (OSError, EOFError, ConnectionError, pickle.PickleError):
+                pass
+            self._connected.clear()
+            try:
+                sock.close()
+            except OSError:
+                pass
+            if self._stopping:
+                self.worker.abort()
+                return 0
+            # reconnect with exponential backoff; exhaustion = give up
+            # (the master's grace window expires and verdicts us)
+            if not self._connect(first=False):
+                return 1
+
+
+def _worker_main(worker_id: int, host: str, port: int, injector,
+                 compute_spec, hb_interval: float, reconnect_backoff: float,
+                 reconnect_tries: int) -> None:
+    """Child-process entry point (spawn target)."""
+    node = _ChildNode(worker_id, host, port, injector, compute_spec,
+                      hb_interval, reconnect_backoff, reconnect_tries)
+    code = node.run()
+    # immediate exit: daemon threads (pumps, worker) must not block
+    # interpreter teardown, and a fail-stopped worker has nothing to flush
+    os._exit(code)

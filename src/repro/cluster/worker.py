@@ -423,6 +423,27 @@ class Worker(threading.Thread):
             self._stopped = True
             self._cv.notify_all()
 
+    def abort(self) -> None:
+        """Stop WITHOUT draining: discard queued work and exit ASAP.
+
+        Engine shutdown path — a closing engine must not sit through a
+        backlog of throttled chunks nobody will collect.  The currently
+        executing chunk (if any) still completes; its events go to a queue
+        nobody reads, which is fine.
+        """
+        with self._cv:
+            self._items.clear()
+            self._stopped = True
+            self._cv.notify_all()
+
+    def cancel_task(self, task: ChunkTask) -> None:
+        """Cancel a dispatched task (sets its master-held cancel event).
+
+        Indirection point for the transport plane: a remote endpoint
+        overrides this to also send the cancel over the wire.
+        """
+        task.cancel.set()
+
     # -- master-side queue surgery (the work-stealing substrate) -----------
     def backlog(self, round_id: Optional[int] = None) -> int:
         """Queued (not yet started) chunk count, optionally for one round."""
@@ -436,6 +457,20 @@ class Worker(threading.Thread):
         """True iff nothing is queued and nothing is executing."""
         with self._cv:
             return not self._items and self._active is None
+
+    def backlog_by_round(self) -> Dict[int, int]:
+        """Queued chunk counts keyed by round id (one queue scan).
+
+        Heartbeat payload for the multi-process transport: the master-side
+        endpoint answers ``backlog(rid)`` probes from this snapshot instead
+        of a per-probe round trip.
+        """
+        with self._cv:
+            out: Dict[int, int] = {}
+            for it in self._items:
+                rid = it[0].task.round_id
+                out[rid] = out.get(rid, 0) + 1
+            return out
 
     def retract(self, round_id: int, chunk_ids: Sequence[int],
                 limit: Optional[int] = None) -> List[int]:

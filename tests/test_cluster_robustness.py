@@ -1,0 +1,198 @@
+"""Lifecycle robustness: idempotent close, admission timeouts, failover
+inside coalesced rounds (PR 7 satellites).
+
+* ``CodedExecutionEngine.shutdown()`` is idempotent and safe with rounds
+  in flight — inflight handles resolve with ``EngineClosed`` instead of
+  hanging, and post-close submissions are refused;
+* ``JobService.close()`` is idempotent and safe under load — running
+  jobs finish, queued-but-unstarted jobs resolve with a clean
+  ``EngineClosed`` error, every handle resolves;
+* ``JobService.submit(timeout=...)`` waits for an admission slot and
+  raises typed ``AdmissionTimeout`` on expiry, counted in
+  ``s2c2_jobs_total{status="rejected"}``;
+* a worker crash inside a *coalesced* multi-RHS round fails over and
+  every participant's future resolves with the right numbers.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.cluster import (AdmissionTimeout, ClusterConfig,
+                           CodedExecutionEngine, EngineClosed, JobService,
+                           MatvecJob, NoSlowdown, ServiceSaturated)
+from repro.core.strategies import GeneralS2C2
+
+RNG = np.random.default_rng(11)
+
+
+def slow_engine(n=6, k=4, row_cost=5e-3, **kw):
+    """In-proc engine whose rounds take ~0.4s of virtual service time."""
+    return CodedExecutionEngine(
+        ClusterConfig(n_workers=n, k=k, row_cost=row_cost,
+                      starvation_timeout=30.0, **kw), NoSlowdown())
+
+
+class TestEngineClose:
+    def test_double_shutdown_is_noop(self):
+        eng = slow_engine(row_cost=1e-5)
+        a = RNG.standard_normal((240, 40))
+        data = eng.load_matrix(a, chunks=12)
+        x = RNG.standard_normal(40)
+        out = eng.matvec(data, x, GeneralS2C2(6, 4, a.shape[0], chunks=12))
+        np.testing.assert_allclose(out.y, a @ x, rtol=1e-9)
+        eng.shutdown()
+        eng.shutdown()      # second call: no-op, no error
+
+    def test_submit_after_close_raises(self):
+        eng = slow_engine(row_cost=1e-5)
+        a = RNG.standard_normal((240, 40))
+        data = eng.load_matrix(a, chunks=12)
+        eng.shutdown()
+        with pytest.raises(EngineClosed):
+            eng.matvec_async(data, RNG.standard_normal(40),
+                             GeneralS2C2(6, 4, a.shape[0], chunks=12))
+
+    def test_close_under_load_resolves_inflight_handles(self):
+        eng = slow_engine()
+        a = RNG.standard_normal((480, 40))
+        data = eng.load_matrix(a, chunks=12)
+        strat = GeneralS2C2(6, 4, a.shape[0], chunks=12)
+        handles = [eng.matvec_async(data, RNG.standard_normal(40), strat)
+                   for _ in range(3)]
+        time.sleep(0.1)             # rounds genuinely in flight
+        eng.shutdown()
+        # every handle resolves (no hang), each with EngineClosed
+        for h in handles:
+            with pytest.raises(EngineClosed):
+                h.result(timeout=10.0)
+
+
+class TestServiceClose:
+    def test_double_close_is_noop(self):
+        eng = slow_engine(row_cost=1e-5)
+        svc = JobService(eng, max_inflight=2)
+        svc.close()
+        svc.close()
+        eng.shutdown()
+
+    def test_submit_after_close_raises(self):
+        eng = slow_engine(row_cost=1e-5)
+        svc = JobService(eng, max_inflight=2)
+        svc.close()
+        a = RNG.standard_normal((240, 40))
+        with pytest.raises(EngineClosed):
+            svc.submit(MatvecJob(a, [RNG.standard_normal(40)],
+                                 GeneralS2C2(6, 4, a.shape[0], chunks=12),
+                                 chunks=12))
+        eng.shutdown()
+
+    def test_close_under_load_resolves_every_handle(self):
+        # one slot: job 1 runs (~0.8s), jobs 2..4 sit in the admission
+        # queue.  close() must let job 1 finish and resolve the queued
+        # handles with a clean EngineClosed error — nobody hangs.
+        eng = slow_engine()
+        svc = JobService(eng, max_inflight=1, coalesce=False)
+        a = RNG.standard_normal((480, 40))
+        strat = GeneralS2C2(6, 4, a.shape[0], chunks=12)
+
+        def job():
+            return MatvecJob(a, [RNG.standard_normal(40) for _ in range(2)],
+                             strat, chunks=12)
+
+        handles = [svc.submit(job()) for _ in range(4)]
+        time.sleep(0.15)            # job 1 well inside its first round
+        svc.close()
+        for h in handles:
+            assert h.wait(timeout=10.0)
+        errors = [h.metrics.error for h in handles]
+        assert errors[0] is None            # the running job finished
+        assert all(e is not None and "EngineClosed" in e
+                   for e in errors[1:])     # queued jobs refused cleanly
+        # refusals are counted as errored jobs, not silently dropped
+        assert eng.registry.value("s2c2_jobs_total", status="error") >= 3.0
+        eng.shutdown()
+
+
+class TestAdmissionTimeout:
+    def test_saturation_raises_typed_timeout_and_counts_rejection(self):
+        eng = slow_engine()
+        svc = JobService(eng, max_queue=1, max_inflight=1, coalesce=False)
+        a = RNG.standard_normal((480, 40))
+        strat = GeneralS2C2(6, 4, a.shape[0], chunks=12)
+
+        def job(nx=2):
+            return MatvecJob(a, [RNG.standard_normal(40) for _ in range(nx)],
+                             strat, chunks=12)
+
+        h1 = svc.submit(job())          # occupies the single slot (~0.8s)
+        time.sleep(0.1)
+        h2 = svc.submit(job())          # fills the only queue slot
+        # blocking submit: waits, then raises the typed subtype
+        t0 = time.perf_counter()
+        with pytest.raises(AdmissionTimeout):
+            svc.submit(job(), timeout=0.05)
+        assert time.perf_counter() - t0 >= 0.04
+        # non-blocking submit keeps the historical immediate reject
+        with pytest.raises(ServiceSaturated) as ei:
+            svc.submit(job())
+        assert not isinstance(ei.value, AdmissionTimeout)
+        assert eng.registry.value("s2c2_jobs_total",
+                                  status="rejected") >= 2.0
+        assert eng.registry.value("s2c2_jobs_rejected_total") >= 2.0
+        for h in (h1, h2):
+            assert h.wait(timeout=30.0)
+            assert h.metrics.error is None
+        # rejected submissions never pollute the per-strategy job report
+        from repro.cluster.metrics import ServiceReport
+        rep = ServiceReport.from_registry(eng.registry, wall_time=1.0)
+        assert rep.n_jobs == 2
+        svc.close()
+        eng.shutdown()
+
+
+class _CrashOnce:
+    """Backend that crashes worker 5's first chunk, then behaves."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.armed = True
+
+    def __call__(self, a_rows, x):
+        if threading.current_thread().name == "worker-5":
+            with self._lock:
+                if self.armed:
+                    self.armed = False
+                    raise RuntimeError("injected backend crash")
+        return a_rows @ x
+
+
+class TestCoalescedFailover:
+    def test_worker_crash_inside_merged_round_resolves_all_participants(self):
+        # two jobs against the shared matrix coalesce into ONE multi-RHS
+        # round; worker 5 crashes (loud WorkerFailed) on its first chunk of
+        # that round.  Failover must finish the merged round and BOTH
+        # participants' futures must resolve with correct output.
+        n, k, chunks = 6, 4, 12
+        eng = CodedExecutionEngine(
+            ClusterConfig(n_workers=n, k=k, row_cost=2e-3,
+                          starvation_timeout=30.0),
+            NoSlowdown(), compute=_CrashOnce())
+        svc = JobService(eng, max_inflight=2, coalesce=True,
+                         coalesce_hold_s=0.3)
+        a = RNG.standard_normal((480, 40))
+        shared = svc.share_matrix(a, chunks=chunks)
+        strat = GeneralS2C2(n, k, a.shape[0], chunks=chunks)
+        xs = [RNG.standard_normal(40), RNG.standard_normal(40)]
+        h1 = svc.submit(MatvecJob(a, [xs[0]], strat, data=shared))
+        h2 = svc.submit(MatvecJob(a, [xs[1]], strat, data=shared))
+        assert h1.wait(timeout=30.0) and h2.wait(timeout=30.0)
+        assert h1.metrics.error is None and h2.metrics.error is None
+        np.testing.assert_allclose(h1.output[0], a @ xs[0], rtol=1e-9)
+        np.testing.assert_allclose(h2.output[0], a @ xs[1], rtol=1e-9)
+        assert svc.coalescer.merged_rounds >= 1
+        assert n - 1 in eng.dead            # the crash was detected...
+        svc.close()
+        eng.shutdown()
