@@ -1,0 +1,16 @@
+#!/usr/bin/env python
+"""Wrapper so s2c2lint runs from a checkout without installing:
+``python scripts/s2c2lint.py [args]`` == ``python -m repro.analysis``."""
+
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+from repro.analysis.__main__ import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -84,7 +84,7 @@ class CodedData:
     def k(self) -> int:
         return self.code.k
 
-    def chunk_range(self, chunk_id: int) -> tuple:
+    def chunk_range(self, chunk_id: int) -> Tuple[int, int]:
         r0 = chunk_id * self.rows_per_chunk
         return r0, r0 + self.rows_per_chunk
 

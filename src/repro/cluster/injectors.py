@@ -145,7 +145,7 @@ class TracedInjector:
     def __init__(self, inner: SlowdownInjector, tracer: "obs.Tracer"):
         self.inner = inner
         self.tracer = tracer
-        self._last: Dict[int, float] = {}
+        self._last: Dict[int, float] = {}   # guarded_by: _lock
         self._lock = threading.Lock()
 
     def speed(self, worker: int, iteration: int) -> float:

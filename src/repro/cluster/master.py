@@ -163,11 +163,14 @@ class _RoundState:
         self.partials: Dict[Tuple[int, int], np.ndarray] = {}
         self.need = k * chunks          # Σ max(0, k - |used[c]|)
         self.assigned: List[Set[int]] = [set() for _ in range(n)]
-        self.pending: Set[int] = set(range(chunks))   # chunks with |used|<k
+        # chunks with |used|<k — thread-confined to the round's driver
+        # guarded_by: thread:round-driver
+        self.pending: Set[int] = set(range(chunks))
         # chunks dispatched to w whose events have not yet been seen and
         # that were not retracted — the deadline clock and the steal pass
         # both key off this (retraction removes entries atomically, so a
         # stolen chunk never earns the donor deadline credit)
+        # guarded_by: thread:round-driver
         self.outstanding: List[Set[int]] = [set() for _ in range(n)]
         self.chunks_done = np.zeros(n, dtype=np.int64)
         self.wasted_chunks = np.zeros(n, dtype=np.int64)
@@ -183,6 +186,7 @@ class _RoundState:
         # worker goes idle, so a verdict landing mid-burst is recovered as
         # soon as a survivor frees up instead of relying on a §4.3 wave
         # budget that may already be spent
+        # guarded_by: thread:round-driver
         self.orphans: Set[int] = set()
         self.steals = 0                 # successful steal passes
         self.retracted = 0              # chunks retracted (== re-dispatched)
@@ -242,21 +246,28 @@ class CodedExecutionEngine:
         self.workers = self.transport.start(cfg, self.events, injector,
                                             compute, self.tracer,
                                             self.registry)
-        self._closed = False
+        self._closed = False                # guarded_by: _rounds_lock
         self.predictor = predictor or SpeedPredictor(cfg.n_workers)
         self.detector = FailureDetector(cfg.n_workers, cfg.k,
                                         slack=cfg.detector_slack,
                                         dead_after=cfg.detector_dead_after)
+        # `dead` is deliberately NOT lock-annotated: it only ever grows,
+        # and the dispatch/steal paths take benign racy membership reads
+        # (a worker missed by one read is fenced on the next) — mutation
+        # and the authoritative reads happen under _obs_lock
         self.dead: Set[int] = set()
-        self.failed: Dict[int, str] = {}    # worker -> crash reason (logged)
-        self.iteration = 0              # drives the injectors
-        self._round_seq = 0
-        self._tenant_seq = 0
+        # worker -> crash reason (logged)
+        self.failed: Dict[int, str] = {}    # guarded_by: _obs_lock
+        # drives the injectors
+        self.iteration = 0                  # guarded_by: _obs_lock
+        self._round_seq = 0                 # guarded_by: _lock
+        self._tenant_seq = 0                # guarded_by: _lock
         self._lock = threading.Lock()       # seq counters only
         self._obs_lock = threading.Lock()   # predictor/detector/iteration
+        # guarded_by: _obs_lock
         self._last_observed: Optional[np.ndarray] = None
         # round_id -> per-round event inbox, fed by the collector thread
-        self._rounds: Dict[int, "queue.Queue"] = {}
+        self._rounds: Dict[int, "queue.Queue"] = {}  # guarded_by: _rounds_lock
         self._rounds_lock = threading.Lock()
         # engine-wide per-worker last-event wall time (written only by the
         # collector; racy reads are benign).  Distinguishes "silent because
@@ -661,6 +672,7 @@ class CodedExecutionEngine:
             return alloc, planned
         raise TypeError(f"unsupported strategy {type(strategy).__name__}")
 
+    # thread: round-driver
     def _dispatch(self, state: _RoundState, rid: int, iteration: int,
                   data: CodedData, x: np.ndarray, worker: int,
                   chunk_ids: List[int]) -> None:
@@ -685,6 +697,7 @@ class CodedExecutionEngine:
                                  round_id=rid, chunk_id=c, t=now)
         self.workers[worker].submit(task)
 
+    # thread: round-driver
     def _run_coded(self, rid: int, inbox: "queue.Queue", inflight: int,
                    data: CodedData, x: np.ndarray, strategy) -> RoundOutput:
         cfg = self.cfg
@@ -698,7 +711,11 @@ class CodedExecutionEngine:
         t_plan0 = time.perf_counter()
         alloc, planned = self._plan(data, strategy, width)
         slack = getattr(strategy, "timeout_slack", cfg.timeout_slack)
-        iteration = self.iteration      # snapshot: all dispatches this round
+        # snapshot the injector step under the observation lock (concurrent
+        # round drivers bump it in _observe): every dispatch this round —
+        # including §4.3 waves and steals — must see one consistent value
+        with self._obs_lock:
+            iteration = self.iteration
 
         state = _RoundState(n, k, C)
         t0 = time.perf_counter()
@@ -1027,6 +1044,7 @@ class CodedExecutionEngine:
         self._publish_round(metrics, state.chunks_done)
         return RoundOutput(y=y, metrics=metrics)
 
+    # thread: round-driver
     def _reassign_wave(self, state: _RoundState, rid: int, iteration: int,
                        data: CodedData, x: np.ndarray, t0: float) -> float:
         """§4.3: re-target missing chunk indices to available workers.
@@ -1091,6 +1109,7 @@ class CodedExecutionEngine:
     # chunk-granular work stealing
     # ------------------------------------------------------------------
 
+    # thread: round-driver
     def _steal_pass(self, state: _RoundState, rid: int, iteration: int,
                     data: CodedData, x: np.ndarray, wi: int) -> int:
         """Refill idle worker ``wi`` with coverage stolen from backlogs.
@@ -1170,6 +1189,7 @@ class CodedExecutionEngine:
             return len(taken)
         return 0
 
+    # thread: round-driver
     def _steal_sweep(self, state: _RoundState, rid: int, iteration: int,
                      data: CodedData, x: np.ndarray) -> None:
         """Offer stolen work to every currently idle worker.
@@ -1193,6 +1213,7 @@ class CodedExecutionEngine:
             if self.workers[wi].idle():
                 self._steal_pass(state, rid, iteration, data, x, wi)
 
+    # thread: round-driver
     def _failover_dispatch(self, state: _RoundState, rid: int,
                            iteration: int, data: CodedData, x: np.ndarray,
                            failed_w: int, chunk_ids: List[int]) -> Set[int]:
@@ -1234,6 +1255,7 @@ class CodedExecutionEngine:
             self.workers[w].promote_round(rid)
         return unplaced
 
+    # thread: round-driver
     def _retry_orphans(self, state: _RoundState, rid: int, iteration: int,
                        data: CodedData, x: np.ndarray) -> None:
         """Retry placement of failover orphans (cheap no-op when empty)."""
@@ -1264,7 +1286,10 @@ class CodedExecutionEngine:
         cfg = self.cfg
         n_parts = len(data.partitions)
         n = cfg.n_workers
-        iteration = self.iteration
+        # same snapshot rule as the coded path: _observe mutates iteration
+        # under _obs_lock from every concurrent driver
+        with self._obs_lock:
+            iteration = self.iteration
         t0 = time.perf_counter()
         rpp = data.rows_per_part
         width = rhs_width(x)            # replicated rounds are width-generic

@@ -10,14 +10,14 @@ percentiles + wasted-work fraction per strategy.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 __all__ = ["RoundMetrics", "JobMetrics", "ServiceReport", "percentile"]
 
 
-def percentile(values, q: float) -> float:
+def percentile(values: Sequence[float], q: float) -> float:
     if len(values) == 0:
         return float("nan")
     return float(np.percentile(np.asarray(values, dtype=np.float64), q))
@@ -49,7 +49,8 @@ class RoundMetrics:
     #                                   round exactly once
     steals: int = 0                   # successful idle-triggered steal passes
     retracted_chunks: int = 0         # chunks retracted and re-dispatched
-    worker_failures: tuple = ()       # WorkerFailed reasons seen this round
+    # WorkerFailed reasons seen this round
+    worker_failures: Tuple[str, ...] = ()
 
     @property
     def total_useful(self) -> float:
@@ -150,7 +151,7 @@ class ServiceReport:
                   ) -> "ServiceReport":
         # errored / half-stamped jobs have NaN timings (see JobMetrics):
         # they count toward n_jobs but must not skew the percentiles
-        def _finite(values):
+        def _finite(values: Iterable[float]) -> List[float]:
             return [v for v in values if np.isfinite(v)]
 
         clean = [j for j in jobs if j.error is None]
@@ -198,7 +199,7 @@ class ServiceReport:
             batched_rounds=batched_rounds)
 
     @classmethod
-    def from_registry(cls, registry, wall_time: float,
+    def from_registry(cls, registry: Any, wall_time: float,
                       max_inflight: int = 1, peak_inflight: int = 1
                       ) -> "ServiceReport":
         """Rebuild a report as a view over a live metrics registry.
@@ -213,7 +214,7 @@ class ServiceReport:
         bridge that keeps the report a *view* over the registry instead
         of a parallel accounting plane.
         """
-        def _q(name: str, q: float, **labels) -> float:
+        def _q(name: str, q: float, **labels: str) -> float:
             h = registry.get(name)
             if h is None or h.count == 0:
                 return float("nan")

@@ -137,9 +137,11 @@ class RoundCoalescer:
         self.max_batch = max_batch
         self.hold_s = hold_s
         self._lock = threading.Lock()
-        self._groups: Dict[Tuple, _CoalesceGroup] = {}
-        self.merged_rounds = 0       # batched rounds launched (B >= 2)
-        self.merged_requests = 0     # requests served via batched rounds
+        self._groups: Dict[Tuple, _CoalesceGroup] = {}  # guarded_by: _lock
+        # batched rounds launched (B >= 2)
+        self.merged_rounds = 0       # guarded_by: _lock
+        # requests served via batched rounds
+        self.merged_requests = 0     # guarded_by: _lock
         self._m_merged_rounds = engine.registry.counter(
             "s2c2_coalesced_rounds_total",
             "multi-RHS rounds launched by the coalescer (B >= 2)")
@@ -408,18 +410,23 @@ class JobService:
         # non-blocking reject; > 0 lets submit() wait that long for a slot
         # before raising AdmissionTimeout (overridable per call)
         self.submit_timeout = submit_timeout
-        self._closed = False
+        self._closed = False           # guarded_by: _lock
         self.queue: "queue.Queue[Optional[JobHandle]]" = queue.Queue(max_queue)
-        self.completed: List[JobMetrics] = []
-        self._seq = 0
-        self._accepted = 0             # jobs actually enqueued (≠ _seq on
-        self._lock = threading.Lock()  # saturation — drain waits on these)
-        self._in_service = 0
-        self._peak_inflight = 0        # max jobs observed in service at once
+        self.completed: List[JobMetrics] = []   # guarded_by: _lock
+        self._seq = 0                  # guarded_by: _lock
+        # jobs actually enqueued (≠ _seq on saturation — drain waits on
+        # these); everything below down to _shared_data shares one lock
+        self._accepted = 0             # guarded_by: _lock
+        self._lock = threading.Lock()
+        self._in_service = 0           # guarded_by: _lock
+        # max jobs observed in service at once
+        self._peak_inflight = 0        # guarded_by: _lock
         self._t_open = time.perf_counter()
-        self._t_first_submit: Optional[float] = None   # throughput window
-        self._shared_ids: Set[str] = set()   # shard ids owned by the service
-        self._shared_data: List[CodedData] = []
+        # throughput window
+        self._t_first_submit: Optional[float] = None   # guarded_by: _lock
+        # shard ids owned by the service
+        self._shared_ids: Set[str] = set()      # guarded_by: _lock
+        self._shared_data: List[CodedData] = []  # guarded_by: _lock
         # service-plane metrics live in the ENGINE's registry, so one
         # render() (or ServiceReport.from_registry) covers both planes
         reg = engine.registry
@@ -573,7 +580,12 @@ class JobService:
             handle = self.queue.get()
             if handle is None:
                 return
-            if self._closed:
+            # the closed flag mutates under _lock (close() racing this
+            # dequeue): an unlocked read here could start a job whose
+            # handle close() has already decided must resolve as refused
+            with self._lock:
+                closed = self._closed
+            if closed:
                 # closing: refuse queued work with a clean resolution so
                 # close() never waits out a backlog of unstarted jobs
                 self._resolve_closed(handle)

@@ -222,15 +222,51 @@ class _TraceBatch:                  # child -> master: forwarded TraceRecords
     records: List
 
 
-#: control-plane messages the chaos layer never touches — losing one is
-#: not a fault the §4.3/§4.4 machinery is meant to absorb (a dropped
-#: shard install is a provisioning bug, not a straggler), the retract
-#: RPC degrades safely on its own timeout without needing injected loss,
-#: and the ACK messages are the *recovery* half of at-least-once delivery
-#: (chaos attacks the payload message itself; attacking an ack too would
-#: only turn loss into duplication, which dup already covers)
-_PROTECTED = (_Hello, _HelloAck, _InstallShard, _DropShard, _Stop,
-              _RetractReq, _RetractReply, _SubmitAck, _EventAck)
+@dataclasses.dataclass(frozen=True)
+class WireSpec:
+    """Protocol-table entry for one frame kind.
+
+    ``direction`` is who sends it (``"c2m"`` child→master, ``"m2c"``
+    master→child, ``"both"``); ``protected`` frames are exempt from
+    chaos injection.  A protected frame is a control-plane message whose
+    loss is not a fault the §4.3/§4.4 machinery is meant to absorb (a
+    dropped shard install is a provisioning bug, not a straggler), a
+    retract RPC that degrades safely on its own timeout without needing
+    injected loss, or an ACK — the *recovery* half of at-least-once
+    delivery (chaos attacks the payload message itself; attacking the
+    ack too would only turn loss into duplication, which dup covers).
+    """
+
+    direction: str
+    protected: bool = False
+
+
+#: THE protocol table — the single source of truth the chaos exemption
+#: set derives from and that ``s2c2lint`` rule S2C205 cross-checks
+#: against the send sites and the isinstance dispatch on each side.
+#: Adding a frame means adding it here, or the lint fails the build.
+WIRE_PROTOCOL: Dict[type, WireSpec] = {
+    _Hello: WireSpec("c2m", protected=True),
+    _HelloAck: WireSpec("m2c", protected=True),
+    _InstallShard: WireSpec("m2c", protected=True),
+    _DropShard: WireSpec("m2c", protected=True),
+    _SubmitTask: WireSpec("m2c"),
+    _SubmitAck: WireSpec("c2m", protected=True),
+    _CancelTask: WireSpec("m2c"),
+    _RetractReq: WireSpec("m2c", protected=True),
+    _RetractReply: WireSpec("c2m", protected=True),
+    _Promote: WireSpec("m2c"),
+    _Stop: WireSpec("m2c", protected=True),
+    _Heartbeat: WireSpec("c2m"),
+    _EventMsg: WireSpec("c2m"),
+    _EventAck: WireSpec("m2c", protected=True),
+    _TraceBatch: WireSpec("c2m"),
+}
+
+#: chaos-exempt frame kinds, derived — never hand-listed — from the
+#: protocol table so the exemption set cannot silently diverge from it
+_PROTECTED = tuple(cls for cls, spec in WIRE_PROTOCOL.items()
+                   if spec.protected)
 
 
 # ---------------------------------------------------------------------------
@@ -388,9 +424,9 @@ class _Chaos:
         self._locks = [threading.Lock() for _ in range(transport.n_workers)]
         self._sched = _DelayScheduler()
         self._sched.start()
-        self._chunks_seen: Dict[int, int] = {}
-        self._killed = False
-        self._conn_dropped = False
+        self._chunks_seen: Dict[int, int] = {}   # guarded_by: _trig_lock
+        self._killed = False                     # guarded_by: _trig_lock
+        self._conn_dropped = False               # guarded_by: _trig_lock
         self._trig_lock = threading.Lock()
 
     def stop(self) -> None:
@@ -502,37 +538,37 @@ class RemoteWorkerEndpoint:
         self.connected_evt = threading.Event()   # first successful attach
         self._ever_connected = False
         self.disconnect_t = 0.0
-        self.last_seen = 0.0                # master clock, any rx message
+        self.last_seen = 0.0    # guarded_by: _lock  (master clock, any rx)
         self._offset: Optional[float] = None
         # task bookkeeping: engine task object <-> wire task id
         self._task_seq = itertools.count(1)
-        self._task_meta: Dict[int, Tuple[int, ChunkTask]] = {}
-        self._task_ids: Dict[int, int] = {}      # id(task) -> task_id
+        self._task_meta: Dict[int, Tuple[int, ChunkTask]] = {}  # guarded_by: _task_lock
+        self._task_ids: Dict[int, int] = {}      # guarded_by: _task_lock
         self._task_lock = threading.Lock()
         # at-least-once event RECEIPT: the child numbers its events with a
         # process-lifetime sequence; we dedup retransmits/dups here and ack
         # the highest contiguous seq so the child can drop its buffer
-        self._ev_floor = 0               # all seqs <= floor delivered
-        self._ev_buf: Dict[int, object] = {}  # out-of-order events held back
+        self._ev_floor = 0               # guarded_by: _lock
+        self._ev_buf: Dict[int, object] = {}  # guarded_by: _lock
         self._rx_thread: Optional[threading.Thread] = None
         # at-least-once submit delivery: tid -> [msg, last_send_t, attempts];
         # entries clear on the child's _SubmitAck, and the transport monitor
         # retransmits overdue ones (lost to chaos OR to a disconnect window).
         # The child dedups by task id; a duplicate that slips through anyway
         # just recomputes — duplicate results are idempotent master-side.
-        self._unacked: Dict[int, List] = {}
+        self._unacked: Dict[int, List] = {}      # guarded_by: _task_lock
         # sync retract RPC slots
         self._rpc_seq = itertools.count(1)
-        self._rpcs: Dict[int, Tuple[threading.Event, List[List[int]]]] = {}
+        self._rpcs: Dict[int, Tuple[threading.Event, List[List[int]]]] = {}  # guarded_by: _rpc_lock
         self._rpc_lock = threading.Lock()
         # heartbeat-carried stats (stale by <= hb_interval; good enough
         # for steal sizing and pool instrumentation)
-        self.busy_s = 0.0
-        self.idle_s = 0.0
-        self.retracted_total = 0
-        self._hb_backlog = 0
-        self._hb_backlog_by_round: Dict[int, int] = {}
-        self._hb_idle = True
+        self.busy_s = 0.0                        # guarded_by: _lock
+        self.idle_s = 0.0                        # guarded_by: _lock
+        self.retracted_total = 0                 # guarded_by: _lock
+        self._hb_backlog = 0                     # guarded_by: _lock
+        self._hb_backlog_by_round: Dict[int, int] = {}  # guarded_by: _lock
+        self._hb_idle = True                     # guarded_by: _lock
 
     # -- clock -------------------------------------------------------------
     @property
@@ -721,6 +757,9 @@ class RemoteWorkerEndpoint:
         frame = encode_frame(msg)
         try:
             with self._tx_lock:
+                # s2c2lint: ignore[S2C203] _tx_lock exists only to keep
+                # concurrent frame writes from interleaving on the wire;
+                # nothing else ever waits on it
                 conn.sendall(frame)
         except OSError:
             return False
@@ -816,7 +855,10 @@ class RemoteWorkerEndpoint:
 
     def promote_round(self, round_id: int) -> int:
         self._send(_Promote(round_id))
-        return self._hb_backlog_by_round.get(round_id, 0)
+        # the backlog map is swapped wholesale by the heartbeat handler;
+        # reading it unlocked raced a dict replacement mid-lookup
+        with self._lock:
+            return self._hb_backlog_by_round.get(round_id, 0)
 
     def backlog(self, round_id: Optional[int] = None) -> int:
         with self._lock:
@@ -1204,7 +1246,7 @@ class _ChildNode:
                              TracedInjector(injector, self.tracer),
                              _resolve_compute(compute_spec),
                              tracer=self.tracer)
-        self.tasks: "Dict[int, ChunkTask]" = {}
+        self.tasks: "Dict[int, ChunkTask]" = {}  # guarded_by: _tasks_lock
         self._tasks_lock = threading.Lock()
         self._sock: Optional[socket.socket] = None
         self._tx_lock = threading.Lock()
@@ -1214,8 +1256,8 @@ class _ChildNode:
         # process-lifetime seq and stays buffered until the master's
         # cumulative ack covers it; the heartbeat pump retransmits overdue
         # entries (lost to chaos or to a disconnect window)
-        self._ev_seq = 0
-        self._ev_unacked: List[List] = []    # [seq, event, last_sent_t]
+        self._ev_seq = 0                     # guarded_by: _ev_lock
+        self._ev_unacked: List[List] = []    # guarded_by: _ev_lock
         self._ev_lock = threading.Lock()
 
     # -- tx ----------------------------------------------------------------
@@ -1225,6 +1267,9 @@ class _ChildNode:
             return False
         try:
             with self._tx_lock:
+                # s2c2lint: ignore[S2C203] _tx_lock only serializes frame
+                # writes from the pumps and the control loop; no other
+                # work ever runs under it
                 sock.sendall(encode_frame(msg))
             return True
         except OSError:

@@ -206,6 +206,7 @@ class KernelBackend:
         self.interpret = interpret
         self.row_bucket_floor = row_bucket_floor
         self._lock = threading.Lock()
+        # guarded_by: _lock
         self._shards: "OrderedDict[Tuple[int, str], object]" = OrderedDict()
         # x LRU: one slot per distinct operand, so concurrent rounds
         # alternating RHS operands (pipelined tenants) each keep their
@@ -216,9 +217,9 @@ class KernelBackend:
         # Key and value land atomically under the lock, so the old
         # stale-pair race (a (snapshot, device) pair written in two steps
         # by interleaved writers) is impossible.
-        self._x_cache: "OrderedDict[Tuple, Tuple]" = OrderedDict()
-        self._x_hits = 0
-        self._x_misses = 0
+        self._x_cache: "OrderedDict[Tuple, Tuple]" = OrderedDict()  # guarded_by: _lock
+        self._x_hits = 0                # guarded_by: _lock
+        self._x_misses = 0              # guarded_by: _lock
 
     # -- shard-aware protocol ----------------------------------------------
     def _device_shard(self, worker_id: int, shard_id: str,
@@ -358,6 +359,10 @@ class _TaskProgress:
 
     def __init__(self, task: ChunkTask, n_chunks: int):
         self.task = task
+        # queued + executing chunks; see the class docstring's terminal-
+        # WorkerDone invariant (the worker's condition lock, not a
+        # _TaskProgress-private one — progress is shared with retract())
+        # guarded_by: _cv
         self.remaining = n_chunks
         self.done = 0
         self.running = False
@@ -386,11 +391,12 @@ class Worker(threading.Thread):
         self._compute_chunk = getattr(compute, "compute_chunk", None)
         self._compute_drop = getattr(compute, "drop_shard", None)
         self._cv = threading.Condition()
-        self._items: Deque[_Item] = deque()
-        self._active: Optional[_TaskProgress] = None
-        self._idle_since: Optional[float] = None    # in-progress idle wait
-        self._stopped = False
-        self.shards: Dict[str, np.ndarray] = {}
+        self._items: Deque[_Item] = deque()          # guarded_by: _cv
+        self._active: Optional[_TaskProgress] = None  # guarded_by: _cv
+        # in-progress idle wait
+        self._idle_since: Optional[float] = None     # guarded_by: _cv
+        self._stopped = False                        # guarded_by: _cv
+        self.shards: Dict[str, np.ndarray] = {}  # guarded_by: _shard_lock
         self._shard_lock = threading.Lock()
         self.dead = False
         self.busy_s = 0.0           # wall seconds spent computing chunks

@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Optional, Sequence
+from typing import Sequence
 
 import numpy as np
 import jax

@@ -20,7 +20,7 @@ are the production implementations (same code drives the shard_map runtime).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Optional
 
 import numpy as np
 

@@ -9,11 +9,8 @@ oracles live in ref.py.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.coded_matvec import coded_matvec_pallas

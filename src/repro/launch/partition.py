@@ -9,7 +9,6 @@ from __future__ import annotations
 from typing import Dict, Optional, Sequence
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 __all__ = ["DEFAULT_RULES", "resolve_axes", "current_mesh", "constrain",

@@ -20,11 +20,9 @@ lower bound).
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Dict, Optional
 
-import numpy as np
 
 __all__ = ["HW", "collective_bytes", "roofline_terms", "model_flops",
            "RooflineResult"]

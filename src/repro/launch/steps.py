@@ -8,8 +8,6 @@ the multi-pod dry-run lowers against.
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -20,7 +18,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.launch import sharding as SH
 from repro.models import build_model
-from repro.models.params import abstract, cast_specs
+from repro.models.params import abstract
 from repro.optim.optimizer import Optimizer, make_optimizer
 
 __all__ = ["build_train_step", "build_prefill_step", "build_decode_step",

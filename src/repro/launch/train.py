@@ -13,7 +13,6 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
 from repro.core.traces import TraceConfig, sample_traces

@@ -12,7 +12,6 @@ true sub-quadratic FLOP count (visible in the roofline numbers).
 
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import Dict, Optional, Tuple
 

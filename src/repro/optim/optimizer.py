@@ -15,11 +15,10 @@ which is what lets the 123B/340B cells fit the v5e HBM budget.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.params import ParamSpec
 

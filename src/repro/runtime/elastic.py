@@ -18,7 +18,7 @@ workers.  At pod scale the same logic governs DP-group membership:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Set
+from typing import Dict, Optional, Set
 
 import numpy as np
 

@@ -27,8 +27,7 @@ allocation, encoding, timeout, decode, checkpoint — is the real code.
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Callable, Dict, Iterator, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp

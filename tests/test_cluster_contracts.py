@@ -1,0 +1,129 @@
+"""Regression tests for the concurrency contracts fixed alongside s2c2lint.
+
+Each test pins one of the genuine findings the analyzer (S2C201) surfaced
+in the cluster package:
+
+* ``RemoteWorkerEndpoint.promote_round`` must read the heartbeat backlog
+  map under ``_lock`` — the heartbeat handler swaps the whole dict, so an
+  unlocked lookup raced the replacement.
+* Round drivers must snapshot ``engine.iteration`` under ``_obs_lock``
+  exactly once per round, so every dispatch in that round — including
+  §4.3 reassignment waves and steals — sees one consistent injector step.
+* ``JobService._run`` must read ``_closed`` under ``_lock``, so jobs
+  queued behind a racing ``close()`` resolve as refused instead of
+  starting — every handle a caller holds is guaranteed to resolve.
+"""
+
+import threading
+
+import numpy as np
+
+from repro.cluster import (ClusterConfig, CodedExecutionEngine, JobService,
+                           MatvecJob, NoSlowdown)
+from repro.cluster.transport import RemoteWorkerEndpoint
+from repro.core.strategies import GeneralS2C2
+
+RNG = np.random.default_rng(7)
+
+N, K, C, D = 6, 4, 8, 192
+
+
+class _NullTransport:
+    """Just enough transport for an endpoint that never touches a socket."""
+
+    chaos = None
+
+
+class TestPromoteRoundLocking:
+    def test_backlog_read_holds_endpoint_lock(self):
+        ep = RemoteWorkerEndpoint(0, _NullTransport())
+        ep._send = lambda msg: None          # skip the socket path entirely
+        ep._hb_backlog_by_round = {7: 1}
+        got = []
+        ep._lock.acquire()
+        try:
+            t = threading.Thread(
+                target=lambda: got.append(ep.promote_round(7)), daemon=True)
+            t.start()
+            t.join(0.2)
+            assert t.is_alive(), \
+                "promote_round read the backlog without taking _lock"
+            # heartbeat-style wholesale swap while the lock is still held:
+            # the promoting thread must observe the post-swap map
+            ep._hb_backlog_by_round = {7: 3}
+        finally:
+            ep._lock.release()
+        t.join(5.0)
+        assert not t.is_alive()
+        assert got == [3]
+
+    def test_unknown_round_backlog_defaults_to_zero(self):
+        ep = RemoteWorkerEndpoint(1, _NullTransport())
+        ep._send = lambda msg: None
+        assert ep.promote_round(99) == 0
+        assert ep.backlog(99) == 0
+
+
+class TestIterationSnapshotPerRound:
+    def test_every_dispatch_in_a_round_sees_one_iteration(self, monkeypatch):
+        eng = CodedExecutionEngine(
+            ClusterConfig(n_workers=N, k=K, row_cost=1e-6),
+            injector=NoSlowdown())
+        try:
+            a = RNG.standard_normal((D, 32))
+            data = eng.load_matrix(a, chunks=C)
+            strat = GeneralS2C2(N, K, D, chunks=C)
+            seen = {}
+            seen_lock = threading.Lock()
+            orig = CodedExecutionEngine._dispatch
+
+            def spy(self, state, rid, iteration, *args, **kw):
+                with seen_lock:
+                    seen.setdefault(rid, set()).add(iteration)
+                return orig(self, state, rid, iteration, *args, **kw)
+
+            monkeypatch.setattr(CodedExecutionEngine, "_dispatch", spy)
+            x = RNG.standard_normal(32)
+            want = a @ x
+            # concurrent rounds bump engine.iteration from several driver
+            # threads while other rounds are mid-dispatch
+            for _ in range(4):
+                handles = [eng.matvec_async(data, x, strat)
+                           for _ in range(4)]
+                for h in handles:
+                    np.testing.assert_allclose(h.result().y, want,
+                                               rtol=1e-9, atol=1e-9)
+            assert seen, "spy never observed a dispatch"
+            for rid, iters in seen.items():
+                assert len(iters) == 1, \
+                    f"round {rid} dispatched under iterations {sorted(iters)}"
+        finally:
+            eng.shutdown()
+
+
+class TestServiceCloseUnderLoad:
+    def test_every_handle_resolves_when_closed_midstream(self):
+        eng = CodedExecutionEngine(
+            ClusterConfig(n_workers=N, k=K, row_cost=2e-5),
+            injector=NoSlowdown())
+        svc = JobService(eng, max_queue=64, max_inflight=2)
+        try:
+            a = RNG.standard_normal((D, 32))
+            strat = GeneralS2C2(N, K, D, chunks=C)
+            xs = RNG.standard_normal((3, 32))
+            handles = [svc.submit(MatvecJob(a, xs, strat, chunks=C))
+                       for _ in range(12)]
+            closer = threading.Thread(target=svc.close, daemon=True)
+            closer.start()
+            closer.join(60.0)
+            assert not closer.is_alive(), "close() hung behind queued jobs"
+            for h in handles:
+                assert h.wait(30.0), "a submitted handle never resolved"
+                m = h.metrics
+                assert m.t_done is not None
+                # a handle either ran to completion or was refused cleanly
+                assert (h.output is not None) or (m.error is not None)
+            with svc._lock:
+                assert len(svc.completed) == svc._accepted
+        finally:
+            eng.shutdown()
