@@ -45,6 +45,18 @@ Four sections:
   ``transport/ab`` records the paired in-process vs multi-process
   makespans and ``transport/chaos`` the chaos arm's completion rate and
   makespan inflation over the clean process pool.
+* ``transport_partition`` — a 2s one-way (events-only) partition of one
+  worker at k == n: every round must ride out the blackout and complete
+  through the credit path (buffered partition-era results replay at heal
+  and count toward coverage).  ``transport/partition`` records the
+  completion rate (acceptance 1.00), partition credits, and the §4.4
+  SUSPECTED-verdict / rejoin counts.
+* ``transport_recovery`` — mid-round master kill + ``recover()`` from the
+  write-ahead round journal: surviving children re-handshake at epoch+1,
+  journaled acks seed coverage, and the resumed decode must be exact.
+  ``transport/recovery`` records crash-to-result latency, recovered
+  chunk count, and the recompute fraction (acceptance 0.00 — journaled
+  work is never re-enqueued).
 * ``trace_overhead`` — the observability overhead budget: interleaved
   tracer-on/tracer-off arms replaying the same straggler-hit round
   sequence (identical seeds ⇒ identical per-round work), rounds paired by
@@ -468,6 +480,144 @@ def transport_ab(csv: Csv) -> None:
         "chaos arm must complete 100% (drop + SIGKILL are recoverable)"
 
 
+def transport_partition(csv: Csv) -> None:
+    """Asymmetric-partition robustness: 2s one-way events blackout.
+
+    k == n pins coverage to every worker, so no survivor can stand in for
+    the partitioned one — every open round MUST ride out the blackout and
+    complete through the credit path (the victim's buffered results replay
+    at heal and count toward coverage; nothing is recomputed).  Acceptance:
+    completion_rate 1.00, at least one partition credit, and the §4.4
+    events-silent-but-heartbeats-arriving verdict + rejoin both fired.
+    """
+    n = k = 3
+    chunks = 2
+    victim = 1
+    rng = np.random.default_rng(47)
+    a = rng.standard_normal((96, 32))
+    xs = [rng.standard_normal(32) for _ in range(6)]
+    strat = GeneralS2C2(n, k, a.shape[0], chunks=chunks)
+    chaos = ChaosConfig(seed=0, partition_worker=victim,
+                        partition_mode="events", partition_after_chunks=1,
+                        partition_duration_s=2.0)
+    eng = CodedExecutionEngine(
+        ClusterConfig(n_workers=n, k=k, row_cost=8e-3,
+                      starvation_timeout=30.0, max_reassign_waves=0,
+                      enable_stealing=False),
+        NoSlowdown(),
+        transport=FaultyTransport(chaos, hb_interval=0.05, hb_miss=4,
+                                  dead_after=2, connect_timeout=60.0,
+                                  event_silence_factor=2.0))
+    try:
+        data = eng.load_matrix(a, chunks=chunks)
+        t0 = time.perf_counter()
+        handles = [eng.matvec_async(data, x, strat) for x in xs]
+        outs = [h.result(timeout=120.0) for h in handles]
+        wall = time.perf_counter() - t0
+        ok = sum(1 for out, x in zip(outs, xs)
+                 if np.allclose(out.y, a @ x, rtol=1e-9))
+        rate = ok / len(xs)
+        credits = sum(o.metrics.partition_credits for o in outs)
+        reg = eng.registry
+        verdicts = reg.value("s2c2_transport_verdicts_total")
+        rejoins = reg.value("s2c2_rejoins_total")
+    finally:
+        eng.shutdown()
+    csv.add("throughput/transport/partition", 0.0,
+            f"makespan={wall:.3f}s completion_rate={rate:.2f} "
+            f"partition_credits={credits} verdicts={verdicts:.0f} "
+            f"rejoins={rejoins:.0f} (acceptance: 1.00, credits >= 1)")
+    BENCH.record("transport/partition",
+                 makespan_s=wall, completion_rate=rate,
+                 partition_credits=credits, verdicts=verdicts,
+                 rejoins=rejoins)
+    assert rate == 1.0, "all rounds must complete across the partition"
+    assert credits >= 1, "heal must credit partition-era work, not recompute"
+
+
+def transport_recovery(csv: Csv) -> None:
+    """Master kill + journal-replay recovery: zero recompute, exact decode.
+
+    A mid-round crash (worker 0 ~12x slow holds the round open) leaves a
+    write-ahead journal with the two fast workers' acks; ``recover()``
+    re-handshakes the surviving children at epoch+1 and resumes from the
+    journal floor.  ``recompute_fraction`` is the share of journaled
+    (worker, chunk) acks the recovered engine re-enqueued — acceptance 0.0
+    — and the resumed decode must match ``a @ x`` exactly.
+    """
+    import shutil
+    import tempfile
+
+    from repro.cluster import EngineClosed
+    from repro.cluster.obs import KIND_ENQUEUE
+
+    n = k = 3
+    chunks = 2
+    rng = np.random.default_rng(53)
+    a = rng.standard_normal((48, 24))
+    x = rng.standard_normal(24)
+    speeds = np.array([[0.08, 1.0, 1.0]])
+    strat = GeneralS2C2(n, k, a.shape[0], chunks=chunks)
+    tmp = tempfile.mkdtemp(prefix="bench_recovery_")
+    cfg = ClusterConfig(n_workers=n, k=k, row_cost=5e-3,
+                        starvation_timeout=20.0, journal_dir=tmp)
+
+    def _transport(connect_timeout=60.0):
+        return SocketTransport(hb_interval=0.05, hb_miss=4, dead_after=2,
+                               connect_timeout=connect_timeout,
+                               reconnect_backoff=0.05, reconnect_tries=10)
+
+    eng = CodedExecutionEngine(cfg, TraceInjector(speeds),
+                               transport=_transport())
+    eng2 = None
+    try:
+        data = eng.load_matrix(a, chunks=chunks)
+        h1 = eng.matvec_async(data, x, strat)
+        deadline = time.perf_counter() + 30.0
+        while (eng.registry.value("s2c2_journal_records_total") < 3 + 4
+               and time.perf_counter() < deadline):
+            time.sleep(0.02)
+        procs = eng.transport.procs
+        t0 = time.perf_counter()
+        eng.crash()
+        try:
+            h1.result(timeout=10.0)
+        except EngineClosed:
+            pass
+        tr = Tracer(enabled=True)
+        eng2 = CodedExecutionEngine.recover(
+            cfg, TraceInjector(speeds), tracer=tr,
+            transport=_transport(connect_timeout=30.0), procs=procs)
+        (rid, handle), = [(h.round_id, h) for h in eng2.recovered.values()]
+        out = handle.result(timeout=60.0)
+        wall = time.perf_counter() - t0
+        exact = bool(np.allclose(out.y, a @ x, rtol=1e-9))
+        journaled = {(w, c)
+                     for c, entries in eng2.journal_state.acks[rid].items()
+                     for w, _ in entries}
+        re_enqueued = {(r.worker, r.chunk_id) for r in tr.snapshot()
+                       if r.kind == KIND_ENQUEUE and r.round_id == rid}
+        recompute = (len(re_enqueued & journaled) / len(journaled)
+                     if journaled else 0.0)
+    finally:
+        eng.shutdown()
+        if eng2 is not None:
+            eng2.shutdown()
+        shutil.rmtree(tmp, ignore_errors=True)
+    csv.add("throughput/transport/recovery", 0.0,
+            f"crash_to_result={wall:.3f}s recovered_chunks="
+            f"{out.metrics.recovered_chunks} journaled={len(journaled)} "
+            f"recompute_fraction={recompute:.2f} exact={exact} "
+            f"(acceptance: 0.00 recompute, exact decode)")
+    BENCH.record("transport/recovery",
+                 crash_to_result_s=wall, completion_rate=1.0 if exact else 0.0,
+                 recovered_chunks=out.metrics.recovered_chunks,
+                 journaled_acks=len(journaled),
+                 recompute_fraction=recompute)
+    assert exact, "recovered decode must match the uncoded reference"
+    assert recompute == 0.0, "journaled acks must never be recomputed"
+
+
 # the overhead arms use 5x-longer chunks than the throughput sweep: at
 # ROW_COST=2e-4 a chunk's virtual time (~6 ms) is comparable to thread-
 # scheduling jitter, so per-round noise (±10%) swamps a ~1% tracer cost;
@@ -542,4 +692,6 @@ def main(csv: Csv) -> None:
     gemm_vs_gemv(csv)
     coalesce_ab(csv)
     transport_ab(csv)
+    transport_partition(csv)
+    transport_recovery(csv)
     trace_overhead(csv)

@@ -1,61 +1,64 @@
-"""Seeded chaos demo: drop/delay/dup + one mid-round SIGKILL, exported
-as a Perfetto timeline.
+"""Seeded chaos demo: three fault scenarios, exported as Perfetto timelines.
 
-Runs a shared-matrix job batch through a real process pool wrapped in
-``FaultyTransport`` chaos, kills one worker's process mid-round, and
-asserts the PR-7 acceptance property end to end:
+Each ``--scenario`` runs a real process pool under seeded chaos and
+asserts its acceptance property end to end, exiting non-zero on any
+violation — CI runs every (scenario, seed) matrix entry and uploads the
+merged master+worker trace:
 
-* every submitted job completes (zero hung futures) with bit-correct
-  decode against the uncoded reference;
-* the kill is visible in the exported trace as a §4.4 fail-stop verdict
-  followed by a failover dispatch (verdict time <= first failover time);
-* the merged timeline (master + rebased worker-side spans) is written as
-  a Chrome/Perfetto JSON artifact.
+* ``kill`` (default, the PR-7 property) — drop/delay/dup chaos plus one
+  mid-round SIGKILL.  Every job completes bit-correct, and the kill is
+  visible in the trace as a §4.4 fail-stop verdict followed by a
+  failover dispatch (verdict time <= first failover time).  The scenario
+  is engineered so verdict → failover is the only recovery path, i.e. it
+  cannot pass by §4.3 waves alone: the doomed worker is injected 5x slow
+  (its 2nd delivered chunk — the kill trigger — lands after the
+  survivors go idle), stealing is off (nothing retracts its backlog
+  first), and ``timeout_slack=3.0`` holds the first reassignment wave
+  far past the verdict.
+* ``partition`` — a 2s one-way (events-only) partition of one worker at
+  k == n, so no survivor can stand in and every open round must ride out
+  the blackout.  Heartbeats keep arriving while events go silent, which
+  draws the §4.4 SUSPECTED (rejoin-eligible) verdict — not a permanent
+  fence; at heal the worker's buffered results replay, are credited to
+  coverage (never recomputed), and the rejoin handshake un-fences it.
+* ``recover`` — mid-round master kill + restart: ``crash()`` severs the
+  master while a journal round is open, ``recover()`` replays the
+  write-ahead round journal, re-handshakes the surviving children at
+  epoch+1, and resumes from the journal floor.  Acceptance: the resumed
+  decode is exact and ZERO journaled (worker, chunk) acks are
+  re-enqueued (asserted from the recovery engine's trace).
 
-The scenario is engineered so verdict → failover is the only recovery
-path, i.e. the demo cannot pass by §4.3 waves alone: the doomed worker
-is injected 5x slow (its 2nd delivered chunk — the kill trigger — lands
-after the survivors go idle), stealing is off (nothing retracts its
-backlog first), and ``timeout_slack=3.0`` holds the first reassignment
-wave far past the verdict.
-
-Exits non-zero on any violated assertion — CI runs one seed per matrix
-entry and uploads the trace:
-
-    python scripts/chaos_demo.py --seed 0 --trace-out chaos_trace.json
+    python scripts/chaos_demo.py --scenario partition --seed 0 \\
+        --trace-out chaos_trace.json
 """
 
 import argparse
+import shutil
 import sys
+import tempfile
+import time
 
 import numpy as np
 
 from repro.cluster import (ChaosConfig, ClusterConfig, CodedExecutionEngine,
-                           FaultyTransport, JobService, MatvecJob,
+                           EngineClosed, FaultyTransport, JobService,
+                           MatvecJob, NoSlowdown, SocketTransport,
                            TraceInjector, Tracer)
+from repro.cluster.obs import KIND_ENQUEUE, KIND_REJOIN
 from repro.core.strategies import GeneralS2C2
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--seed", type=int, default=0,
-                    help="chaos schedule seed (CI matrix: 0, 1, 2)")
-    ap.add_argument("--trace-out", default="chaos_trace.json",
-                    help="Perfetto/Chrome trace output path")
-    ap.add_argument("--jobs", type=int, default=4,
-                    help="matvec jobs to push through the pool")
-    args = ap.parse_args(argv)
-
+def scenario_kill(seed: int, trace_out: str, jobs: int) -> int:
     n, k, chunks = 6, 4, 12
-    rng = np.random.default_rng(args.seed + 1000)
+    rng = np.random.default_rng(seed + 1000)
     a = rng.standard_normal((480, 80))
-    xs = [rng.standard_normal(80) for _ in range(args.jobs)]
+    xs = [rng.standard_normal(80) for _ in range(jobs)]
 
     tr = Tracer(enabled=True)
     speeds = np.ones((1, n))
     speeds[0, n - 1] = 0.2          # doomed worker: slow, so its kill
     #                                 trigger fires after survivors idle
-    chaos = ChaosConfig(seed=args.seed, p_drop=0.02, p_delay=0.05,
+    chaos = ChaosConfig(seed=seed, p_drop=0.02, p_delay=0.05,
                         p_dup=0.02, kill_worker=n - 1, kill_after_chunks=2)
     eng = CodedExecutionEngine(
         ClusterConfig(n_workers=n, k=k, row_cost=5e-3,
@@ -77,7 +80,7 @@ def main(argv=None) -> int:
         for h, x in zip(handles, xs):
             np.testing.assert_allclose(h.output[0], a @ x, rtol=1e-9)
         print(f"all {len(handles)} jobs completed bit-correct "
-              f"(seed={args.seed}, worker {n - 1} SIGKILLed mid-round)")
+              f"(seed={seed}, worker {n - 1} SIGKILLed mid-round)")
     finally:
         svc.close()
         eng.shutdown()      # drains the worker-side trace tail
@@ -91,11 +94,145 @@ def main(argv=None) -> int:
         "failover must follow the verdict, not precede it"
     assert n - 1 in eng.dead, "killed worker not fenced engine-wide"
     chaos_evs = sum(1 for r in recs if r.kind == "chaos")
-    n_ev = tr.dump(args.trace_out)
+    n_ev = tr.dump(trace_out)
     print(f"verdict at t={min(verdicts):.3f}s, first failover at "
           f"t={min(failovers):.3f}s, {chaos_evs} chaos injections")
-    print(f"wrote {args.trace_out} ({n_ev} Perfetto events)")
+    print(f"wrote {trace_out} ({n_ev} Perfetto events)")
     return 0
+
+
+def scenario_partition(seed: int, trace_out: str, jobs: int) -> int:
+    n = k = 3
+    chunks = 2
+    victim = 1
+    rng = np.random.default_rng(seed + 2000)
+    a = rng.standard_normal((96, 32))
+    xs = [rng.standard_normal(32) for _ in range(jobs)]
+    strat = GeneralS2C2(n, k, a.shape[0], chunks=chunks)
+    chaos = ChaosConfig(seed=seed, partition_worker=victim,
+                        partition_mode="events", partition_after_chunks=1,
+                        partition_duration_s=2.0)
+    tr = Tracer(enabled=True)
+    eng = CodedExecutionEngine(
+        ClusterConfig(n_workers=n, k=k, row_cost=8e-3,
+                      starvation_timeout=30.0, max_reassign_waves=0,
+                      enable_stealing=False),
+        NoSlowdown(), tracer=tr,
+        transport=FaultyTransport(chaos, hb_interval=0.05, hb_miss=4,
+                                  dead_after=2, connect_timeout=60.0,
+                                  event_silence_factor=2.0))
+    try:
+        data = eng.load_matrix(a, chunks=chunks)
+        handles = [eng.matvec_async(data, x, strat) for x in xs]
+        outs = [h.result(timeout=120.0) for h in handles]
+        for out, x in zip(outs, xs):
+            np.testing.assert_allclose(out.y, a @ x, rtol=1e-9)
+        credits = sum(o.metrics.partition_credits for o in outs)
+        reg = eng.registry
+        assert reg.value("s2c2_transport_verdicts_total") >= 1, \
+            "events-silent partition never drew a §4.4 verdict"
+        assert reg.value("s2c2_rejoins_total") >= 1, \
+            "healed worker never completed the rejoin handshake"
+        assert credits >= 1, \
+            "partition-era work must be credited at heal, not recomputed"
+        print(f"all {len(outs)} rounds completed bit-correct across a "
+              f"2.0s events partition of worker {victim} (seed={seed}); "
+              f"{credits} partition-era chunks credited, never recomputed")
+    finally:
+        eng.shutdown()
+
+    recs = tr.snapshot()
+    assert any(r.kind == KIND_REJOIN for r in recs), \
+        "rejoin handshake missing from trace"
+    n_ev = tr.dump(trace_out)
+    print(f"wrote {trace_out} ({n_ev} Perfetto events)")
+    return 0
+
+
+def scenario_recover(seed: int, trace_out: str, jobs: int) -> int:
+    n = k = 3
+    chunks = 2
+    rng = np.random.default_rng(seed + 3000)
+    a = rng.standard_normal((48, 24))
+    x = rng.standard_normal(24)
+    speeds = np.array([[0.08, 1.0, 1.0]])    # worker 0 holds the round open
+    strat = GeneralS2C2(n, k, a.shape[0], chunks=chunks)
+    tmp = tempfile.mkdtemp(prefix="chaos_demo_recover_")
+    cfg = ClusterConfig(n_workers=n, k=k, row_cost=5e-3,
+                        starvation_timeout=20.0, journal_dir=tmp)
+
+    def transport(connect_timeout=60.0):
+        return SocketTransport(hb_interval=0.05, hb_miss=4, dead_after=2,
+                               connect_timeout=connect_timeout,
+                               reconnect_backoff=0.05, reconnect_tries=10)
+
+    eng = CodedExecutionEngine(cfg, TraceInjector(speeds),
+                               transport=transport())
+    eng2 = None
+    try:
+        data = eng.load_matrix(a, chunks=chunks)
+        h1 = eng.matvec_async(data, x, strat)
+        deadline = time.perf_counter() + 30.0
+        while (eng.registry.value("s2c2_journal_records_total") < 3 + 4
+               and time.perf_counter() < deadline):
+            time.sleep(0.02)
+        procs = eng.transport.procs
+        eng.crash()
+        try:
+            h1.result(timeout=10.0)
+            raise AssertionError("crashed round resolved without "
+                                 "EngineClosed")
+        except EngineClosed:
+            pass
+        tr = Tracer(enabled=True)
+        eng2 = CodedExecutionEngine.recover(
+            cfg, TraceInjector(speeds), tracer=tr,
+            transport=transport(connect_timeout=30.0), procs=procs)
+        assert len(eng2.recovered) == 1, \
+            f"expected 1 journaled open round, got {len(eng2.recovered)}"
+        (rid, handle), = [(h.round_id, h) for h in eng2.recovered.values()]
+        out = handle.result(timeout=60.0)
+        np.testing.assert_allclose(out.y, a @ x, rtol=1e-9)
+        journaled = {(w, c)
+                     for c, entries in eng2.journal_state.acks[rid].items()
+                     for w, _ in entries}
+        re_enqueued = {(r.worker, r.chunk_id) for r in tr.snapshot()
+                       if r.kind == KIND_ENQUEUE and r.round_id == rid}
+        assert journaled, "no acks survived in the journal"
+        assert not (re_enqueued & journaled), \
+            f"journaled acks recomputed: {sorted(re_enqueued & journaled)}"
+        assert re_enqueued, "the interrupted worker's chunks never resumed"
+        print(f"master killed mid-round and recovered (seed={seed}): "
+              f"{len(journaled)} journaled acks seeded, "
+              f"{out.metrics.recovered_chunks} chunks recovered, "
+              f"0 recomputed, exact decode")
+        n_ev = tr.dump(trace_out)
+        print(f"wrote {trace_out} ({n_ev} Perfetto events)")
+    finally:
+        eng.shutdown()
+        if eng2 is not None:
+            eng2.shutdown()
+        shutil.rmtree(tmp, ignore_errors=True)
+    return 0
+
+
+SCENARIOS = {"kill": scenario_kill,
+             "partition": scenario_partition,
+             "recover": scenario_recover}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--scenario", choices=sorted(SCENARIOS), default="kill",
+                    help="fault scenario to replay (default: kill)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="chaos schedule seed (CI matrix: 0, 1, 2)")
+    ap.add_argument("--trace-out", default="chaos_trace.json",
+                    help="Perfetto/Chrome trace output path")
+    ap.add_argument("--jobs", type=int, default=4,
+                    help="jobs/rounds to push through the pool")
+    args = ap.parse_args(argv)
+    return SCENARIOS[args.scenario](args.seed, args.trace_out, args.jobs)
 
 
 if __name__ == "__main__":

@@ -25,6 +25,22 @@ tuple can silently diverge from it — the chaos plane reads
 transport must actually consult it.  Worker event dataclasses (anything
 ``.put(...)`` onto the event queue in ``worker.py``) must have an
 ``isinstance`` handler in ``master.py``.
+
+Two further cross-checks ride on S2C205:
+
+* **Fenced frames.**  A frame registered ``fenced=True`` carries the
+  epoch fencing token: its dataclass must declare an ``epoch`` field,
+  and every receiving side's handler function must contain an epoch
+  comparison (an ``ast.Compare`` touching a ``.epoch`` attribute) — a
+  fenced frame accepted without checking its token reopens the
+  split-brain window the epochs exist to close.
+
+* **Journal kinds.**  ``journal.py`` owns a ``JOURNAL_KINDS`` registry
+  mirroring ``WIRE_PROTOCOL``: every ``append_record("<kind>", ...)``
+  / ``_journal("<kind>", ...)`` call site anywhere in the package must
+  use a registered kind, and every registered kind must be folded by
+  ``RoundJournal.replay`` — an unfolded kind silently drops durable
+  state on recovery.
 """
 
 from __future__ import annotations
@@ -224,7 +240,7 @@ class WireProtocolRule:
 
         # 2. every registered frame has a handler on its receiving side
         master_names, child_names = self._handler_sides(project, transport)
-        for name, (direction, _prot, line) in sorted(registry.items()):
+        for name, (direction, _prot, _fen, line) in sorted(registry.items()):
             if direction not in ("c2m", "m2c", "both"):
                 findings.append(Finding(
                     "S2C205", transport.path, line,
@@ -247,16 +263,24 @@ class WireProtocolRule:
 
         # 4. worker events handled by the master collector
         findings.extend(self._check_worker_events(project))
+
+        # 5. fenced frames declare + check the epoch token
+        findings.extend(self._check_fenced(project, transport, registry))
+
+        # 6. journal kinds: registered at every append, folded on replay
+        findings.extend(self._check_journal(project))
         return findings
 
     # -- registry parsing ---------------------------------------------------
 
     @staticmethod
     def _parse_registry(transport: SourceFile
-                        ) -> Tuple[Optional[Dict[str, Tuple[str, bool, int]]],
+                        ) -> Tuple[Optional[Dict[str,
+                                                 Tuple[str, bool, bool,
+                                                       int]]],
                                    int]:
-        """name -> (direction, protected, line) from the WIRE_PROTOCOL
-        dict literal."""
+        """name -> (direction, protected, fenced, line) from the
+        WIRE_PROTOCOL dict literal."""
         for node in ast.walk(transport.tree):
             targets = []
             if isinstance(node, ast.Assign):
@@ -272,30 +296,39 @@ class WireProtocolRule:
                 continue
             if not isinstance(value, ast.Dict):
                 return None, node.lineno
-            out: Dict[str, Tuple[str, bool, int]] = {}
+            out: Dict[str, Tuple[str, bool, bool, int]] = {}
             for k, v in zip(value.keys, value.values):
                 if not isinstance(k, ast.Name):
                     continue
-                direction, protected = "?", False
+                direction, protected, fenced = "?", False, False
                 if isinstance(v, ast.Call):
-                    if v.args and isinstance(v.args[0], ast.Constant):
-                        direction = v.args[0].value
-                    if len(v.args) > 1 and isinstance(v.args[1],
-                                                      ast.Constant):
-                        protected = bool(v.args[1].value)
+                    for i, arg in enumerate(v.args):
+                        if not isinstance(arg, ast.Constant):
+                            continue
+                        if i == 0:
+                            direction = arg.value
+                        elif i == 1:
+                            protected = bool(arg.value)
+                        elif i == 2:
+                            fenced = bool(arg.value)
                     for kw in v.keywords:
                         if isinstance(kw.value, ast.Constant):
                             if kw.arg == "direction":
                                 direction = kw.value.value
                             elif kw.arg == "protected":
                                 protected = bool(kw.value.value)
+                            elif kw.arg == "fenced":
+                                fenced = bool(kw.value.value)
                 elif isinstance(v, ast.Tuple) and v.elts:
-                    if isinstance(v.elts[0], ast.Constant):
-                        direction = v.elts[0].value
-                    if len(v.elts) > 1 and isinstance(v.elts[1],
-                                                      ast.Constant):
-                        protected = bool(v.elts[1].value)
-                out[k.id] = (direction, protected, k.lineno)
+                    consts = [e.value if isinstance(e, ast.Constant)
+                              else None for e in v.elts]
+                    if consts and consts[0] is not None:
+                        direction = consts[0]
+                    if len(consts) > 1 and consts[1] is not None:
+                        protected = bool(consts[1])
+                    if len(consts) > 2 and consts[2] is not None:
+                        fenced = bool(consts[2])
+                out[k.id] = (direction, protected, fenced, k.lineno)
             return out, node.lineno
         return None, 1
 
@@ -358,6 +391,144 @@ class WireProtocolRule:
                 "S2C205", transport.path, prot_node.lineno,
                 "no isinstance(..., _PROTECTED) check found: the chaos "
                 "transport does not consult the protection table"))
+        return findings
+
+    # -- fenced frames ------------------------------------------------------
+
+    _SIDES = {"c2m": ("master",), "m2c": ("child",),
+              "both": ("master", "child")}
+
+    @classmethod
+    def _check_fenced(cls, project: Project, transport: SourceFile,
+                      registry: Dict[str, Tuple[str, bool, bool, int]]
+                      ) -> List[Finding]:
+        fenced = {name: (direction, line)
+                  for name, (direction, _p, fen, line) in registry.items()
+                  if fen}
+        if not fenced:
+            return []
+        findings: List[Finding] = []
+        # (i) the frame dataclass declares an epoch field
+        fields: Dict[str, Set[str]] = {}
+        for node in ast.walk(transport.tree):
+            if isinstance(node, ast.ClassDef) and node.name in fenced:
+                fields[node.name] = {
+                    s.target.id for s in node.body
+                    if isinstance(s, ast.AnnAssign)
+                    and isinstance(s.target, ast.Name)}
+        for name, (_direction, line) in sorted(fenced.items()):
+            if "epoch" not in fields.get(name, set()):
+                findings.append(Finding(
+                    "S2C205", transport.path, line,
+                    f"fenced frame '{name}' declares no 'epoch' field "
+                    f"(the fencing token has nowhere to ride)"))
+        # (ii) every receiving side's handler compares the token
+        handlers: Dict[str, List[ast.FunctionDef]] = {"master": [],
+                                                      "child": []}
+        for cdef, fn in iter_functions(transport):
+            side = "child" if cdef is not None and \
+                ("Child" in cdef.name or "Node" in cdef.name) else "master"
+            handlers[side].append(fn)
+        for basename, side in (("master.py", "master"),
+                               ("worker.py", "child")):
+            src = project.file_named(basename)
+            if src is not None:
+                for _cdef, fn in iter_functions(src):
+                    handlers[side].append(fn)
+        for name, (direction, line) in sorted(fenced.items()):
+            for side in cls._SIDES.get(direction, ()):
+                fns = [fn for fn in handlers[side]
+                       if name in _isinstance_targets(fn)]
+                if fns and not any(cls._has_epoch_compare(fn)
+                                   for fn in fns):
+                    findings.append(Finding(
+                        "S2C205", transport.path, line,
+                        f"fenced frame '{name}' ({direction}) is handled "
+                        f"on the {side} side without an epoch comparison "
+                        f"— stale-epoch traffic would be accepted"))
+        return findings
+
+    @staticmethod
+    def _has_epoch_compare(fn: ast.FunctionDef) -> bool:
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Compare):
+                for sub in ast.walk(node):
+                    if isinstance(sub, ast.Attribute) and \
+                            sub.attr == "epoch":
+                        return True
+        return False
+
+    # -- journal kinds ------------------------------------------------------
+
+    @staticmethod
+    def _check_journal(project: Project) -> List[Finding]:
+        journal = project.file_named("journal.py")
+        if journal is None:
+            return []
+        findings: List[Finding] = []
+        kinds: Optional[Set[str]] = None
+        kinds_line = 1
+        for node in ast.walk(journal.tree):
+            targets = []
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+                value = node.value
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                targets = [node.target]
+                value = node.value
+            else:
+                continue
+            if any(isinstance(t, ast.Name) and t.id == "JOURNAL_KINDS"
+                   for t in targets):
+                kinds_line = node.lineno
+                if isinstance(value, ast.Dict):
+                    kinds = {k.value for k in value.keys
+                             if isinstance(k, ast.Constant)
+                             and isinstance(k.value, str)}
+                break
+        if kinds is None:
+            findings.append(Finding(
+                "S2C205", journal.path, kinds_line,
+                "journal.py defines no JOURNAL_KINDS registry "
+                "(dict literal: kind -> payload contract)"))
+            return findings
+        # every append site uses a registered kind
+        for src in project.files:
+            for node in ast.walk(src.tree):
+                if isinstance(node, ast.Call) and \
+                        isinstance(node.func, ast.Attribute) and \
+                        node.func.attr in ("append_record", "_journal") \
+                        and node.args and \
+                        isinstance(node.args[0], ast.Constant) and \
+                        isinstance(node.args[0].value, str):
+                    kind = node.args[0].value
+                    if kind not in kinds:
+                        findings.append(Finding(
+                            "S2C205", src.path, node.lineno,
+                            f"journal record kind {kind!r} is appended "
+                            f"but not registered in JOURNAL_KINDS"))
+        # every registered kind is folded by replay()
+        replay_fn = None
+        for _cdef, fn in iter_functions(journal):
+            if fn.name == "replay":
+                replay_fn = fn
+                break
+        if replay_fn is None:
+            findings.append(Finding(
+                "S2C205", journal.path, kinds_line,
+                "journal.py defines JOURNAL_KINDS but no replay() folds "
+                "the records back"))
+            return findings
+        folded = {n.value for n in ast.walk(replay_fn)
+                  if isinstance(n, ast.Constant)
+                  and isinstance(n.value, str)}
+        for kind in sorted(kinds):
+            if kind not in folded:
+                findings.append(Finding(
+                    "S2C205", journal.path, kinds_line,
+                    f"journal kind {kind!r} is registered but never "
+                    f"folded in RoundJournal.replay — durable state "
+                    f"would be dropped on recovery"))
         return findings
 
     # -- worker events ------------------------------------------------------

@@ -37,6 +37,7 @@ from repro.cluster.data import CodedData, ReplicatedData, replica_placement
 from repro.cluster.injectors import (BurstyInjector, FailStopInjector,
                                      NoSlowdown, SlowdownInjector,
                                      TracedInjector, TraceInjector)
+from repro.cluster.journal import JournalState, RoundJournal
 from repro.cluster.master import (ClusterConfig, CodedExecutionEngine,
                                   EngineClosed, RoundHandle, RoundOutput)
 from repro.cluster.metrics import JobMetrics, RoundMetrics, ServiceReport
@@ -50,20 +51,21 @@ from repro.cluster.transport import (ChaosConfig, FaultyTransport,
                                      InProcTransport, SocketTransport,
                                      Transport)
 from repro.cluster.worker import (ChunkDone, KernelBackend, Worker,
-                                  WorkerDone, WorkerFailed, kernel_backend)
+                                  WorkerDone, WorkerFailed, WorkerRejoined,
+                                  kernel_backend, shard_digest)
 
 __all__ = [
     "BurstyInjector", "FailStopInjector", "NoSlowdown", "SlowdownInjector",
     "TraceInjector", "TracedInjector",
     "ChunkDone", "KernelBackend", "Worker", "WorkerDone", "WorkerFailed",
-    "kernel_backend",
+    "WorkerRejoined", "kernel_backend", "shard_digest",
     "CodedData", "ReplicatedData", "replica_placement",
     "ClusterConfig", "CodedExecutionEngine", "RoundHandle", "RoundOutput",
     "RoundMetrics", "JobMetrics", "ServiceReport",
     "JobService", "MatvecJob", "PageRankJob", "RegressionJob",
     "RoundCoalescer", "ServiceSaturated", "AdmissionTimeout", "EngineClosed",
     "Transport", "InProcTransport", "SocketTransport", "FaultyTransport",
-    "ChaosConfig",
+    "ChaosConfig", "RoundJournal", "JournalState",
     "Tracer", "TraceRecord", "MetricsRegistry",
     "Counter", "Gauge", "Histogram",
     "chrome_trace_events", "export_chrome_trace", "configure_logging",

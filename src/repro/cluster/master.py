@@ -62,23 +62,27 @@ predictor/detector state is updated under one lock at round boundaries.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import logging
 import queue
 import threading
 import time
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Any, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
 from repro.cluster import obs
 from repro.cluster.data import CodedData, ReplicatedData
 from repro.cluster.injectors import SlowdownInjector, TracedInjector
+from repro.cluster.journal import (JournalState, RoundJournal, decode_array,
+                                   encode_array)
 from repro.cluster.metrics import RoundMetrics
 from repro.cluster.obs import MetricsRegistry, Tracer
-from repro.cluster.transport import InProcTransport, Transport
+from repro.cluster.transport import (InProcTransport, SocketTransport,
+                                     Transport)
 from repro.cluster.worker import (ChunkDone, ChunkTask, ComputeFn, Worker,
-                                  WorkerDone, WorkerFailed, numpy_backend,
-                                  rhs_width)
+                                  WorkerDone, WorkerFailed, WorkerRejoined,
+                                  numpy_backend, rhs_width, shard_digest)
 from repro.core.coding import MDSCode
 from repro.core.predictor import SpeedPredictor
 from repro.core.s2c2 import Allocation, expected_makespan
@@ -90,6 +94,42 @@ __all__ = ["ClusterConfig", "CodedExecutionEngine", "RoundOutput",
            "RoundHandle", "EngineClosed"]
 
 logger = logging.getLogger("repro.cluster.master")
+
+
+def _array_digest(arr: np.ndarray) -> str:
+    """Content digest of an operand (journal replay-cache keying)."""
+    arr = np.ascontiguousarray(arr)
+    h = hashlib.sha256()
+    h.update(str((arr.shape, str(arr.dtype))).encode())
+    h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+_STRATEGY_CLASSES = {c.__name__: c for c in (MDSCoded, BasicS2C2,
+                                             GeneralS2C2)}
+
+
+def _strategy_spec(strategy) -> Dict[str, Any]:
+    """JSON-able (class, scalar init fields) spec of a coded strategy."""
+    params = {}
+    for f in dataclasses.fields(strategy):
+        if not f.init:
+            continue
+        v = getattr(strategy, f.name)
+        if isinstance(v, (int, float, str, bool)):
+            params[f.name] = v
+    return {"cls": type(strategy).__name__, "params": params}
+
+
+def _strategy_key(strategy) -> str:
+    spec = _strategy_spec(strategy)
+    return spec["cls"] + ":" + ",".join(
+        f"{k}={v}" for k, v in sorted(spec["params"].items()))
+
+
+def _resolve_strategy(spec: Dict[str, Any]):
+    cls = _STRATEGY_CLASSES[spec["cls"]]
+    return cls(**spec["params"])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,6 +153,11 @@ class ClusterConfig:
     #             s_idle/(s_idle+s_donor)⌉: a fast idle worker takes most of
     #             a slow donor's backlog, a slow one takes little
     steal_sizing: str = "half"
+    # write-ahead journal directory: when set, the engine appends tenant
+    # installs, round plans, and collected-chunk acks to
+    # <journal_dir>/journal.jsonl so CodedExecutionEngine.recover() can
+    # rebuild open rounds after a master crash without recompute
+    journal_dir: Optional[str] = None
 
     def __post_init__(self):
         if self.steal_sizing not in ("half", "speed"):
@@ -192,6 +237,19 @@ class _RoundState:
         self.retracted = 0              # chunks retracted (== re-dispatched)
         self.failures: List[str] = []   # WorkerFailed reasons seen
         self.last_sweep = 0.0           # rate limiter for _steal_sweep
+        # workers that failed THIS round and have not rejoined: a chunk
+        # credit arriving from one of them is partition-era work replayed
+        # after heal (counted as a partition credit, not recompute)
+        # guarded_by: thread:round-driver
+        self.failed_workers: Set[int] = set()
+        # chunks a worker had in flight when it was fenced: if one of them
+        # later arrives FROM THAT WORKER it is partition-era replay and is
+        # credited even when the rejoin handshake (cheap control frames)
+        # outran the buffered event retransmits that un-fenced the worker
+        # guarded_by: thread:round-driver
+        self.partition_claims: Dict[int, Set[int]] = {}
+        self.partition_credits = 0
+        self.recovered_chunks = 0       # coverage seeded from the journal
 
 
 class _Shutdown:
@@ -246,6 +304,27 @@ class CodedExecutionEngine:
         self.workers = self.transport.start(cfg, self.events, injector,
                                             compute, self.tracer,
                                             self.registry)
+        # write-ahead journal (crash recovery): meta first, so a replay
+        # knows the bound port + fencing epoch before any round state
+        self.journal: Optional[RoundJournal] = (
+            RoundJournal(cfg.journal_dir) if cfg.journal_dir else None)
+        if self.journal is not None:
+            self._journal("meta", {
+                "n_workers": cfg.n_workers, "k": cfg.k,
+                "row_cost": cfg.row_cost,
+                "generator_kind": cfg.generator_kind,
+                "port": getattr(self.transport, "bound_port", None),
+                "epoch": getattr(self.transport, "epoch", 1)})
+        #: replay cache filled by recover(): (matrix_digest, x_digest,
+        #: strategy_key) -> RoundHandle of the resumed round, letting the
+        #: service resolve resubmitted work without recompute
+        self.recovered: Dict[Tuple[str, str, str], "RoundHandle"] = {}
+        #: replayed snapshot attached by recover() (service recovery reads
+        #: open_jobs from it); None on a normally-constructed engine
+        self.journal_state: Optional[JournalState] = None
+        # shard_id -> content digest of the ORIGINAL matrix (plan records
+        # reference tenants by it; filled by load_matrix and recovery)
+        self._tenant_digests: Dict[str, str] = {}   # guarded_by: _lock
         self._closed = False                # guarded_by: _rounds_lock
         self.predictor = predictor or SpeedPredictor(cfg.n_workers)
         self.detector = FailureDetector(cfg.n_workers, cfg.k,
@@ -323,6 +402,34 @@ class CodedExecutionEngine:
         self._m_batched = reg.counter(
             "s2c2_batched_rounds_total", "rounds executed with RHS "
             "width > 1")
+        # partition/recovery plane
+        self._m_partition_credits = reg.counter(
+            "s2c2_partition_credits_total",
+            "chunks credited from a SUSPECTED worker's partition-era "
+            "replay", ("transport",))
+        self._m_recoveries = reg.counter(
+            "s2c2_recoveries_total",
+            "master restart/recovery runs completed", ("transport",))
+        self._m_recovered_chunks = reg.counter(
+            "s2c2_recovered_chunks_total",
+            "chunk coverage seeded from the journal (not recomputed)",
+            ("transport",))
+        self._m_journal_records = reg.counter(
+            "s2c2_journal_records_total",
+            "write-ahead journal records appended", ("kind",))
+        self._m_journal_bytes = reg.counter(
+            "s2c2_journal_bytes_total",
+            "write-ahead journal bytes appended")
+
+    def _journal(self, kind: str, payload: Dict[str, Any]) -> None:
+        """Append one write-ahead record (no-op without a journal)."""
+        j = self.journal
+        if j is None:
+            return
+        before = j.bytes_written
+        j.append_record(kind, payload)
+        self._m_journal_records.labels(kind=kind).inc()
+        self._m_journal_bytes.inc(j.bytes_written - before)
 
     def _publish_round(self, m: RoundMetrics,
                        chunk_counts: Optional[np.ndarray] = None) -> None:
@@ -401,15 +508,38 @@ class CodedExecutionEngine:
                 for rid, inbox in targets:
                     inbox.put(dataclasses.replace(ev, round_id=rid))
                 continue
+            if isinstance(ev, WorkerRejoined):
+                # the transport un-fenced a SUSPECTED worker (digest-valid
+                # shards, partition healed): readmit it to planning with
+                # FRESH learning state — its pre-partition speed history
+                # and §4.4 strikes are both stale
+                w = ev.worker
+                logger.info("worker %d rejoined: readmitted to planning", w)
+                with self._obs_lock:
+                    self.dead.discard(w)
+                    self.failed.pop(w, None)
+                    self.detector.reset_worker(w)
+                    self.predictor.reset_worker(w)
+                    n_dead = len(self.dead)
+                self._m_dead.set(n_dead)
+                # broadcast so each open round stops classifying this
+                # worker's future credits as partition-era replay
+                with self._rounds_lock:
+                    targets = list(self._rounds.items())
+                for rid, inbox in targets:
+                    inbox.put(dataclasses.replace(ev, round_id=rid))
+                continue
             with self._rounds_lock:
                 inbox = self._rounds.get(getattr(ev, "round_id", None))
             if inbox is not None:
                 inbox.put(ev)
 
-    def _register_round(self) -> Tuple[int, "queue.Queue", int]:
-        with self._lock:
-            self._round_seq += 1
-            rid = self._round_seq
+    def _register_round(self, rid: Optional[int] = None
+                        ) -> Tuple[int, "queue.Queue", int]:
+        if rid is None:
+            with self._lock:
+                self._round_seq += 1
+                rid = self._round_seq
         inbox: "queue.Queue" = queue.Queue()
         with self._rounds_lock:
             # checked under the same lock shutdown() takes before it
@@ -458,6 +588,22 @@ class CodedExecutionEngine:
         data = CodedData.encode(shard_id, a, code, chunks)
         for w, worker in enumerate(self.workers):
             worker.install_shard(shard_id, data.partitions[w])
+        if self.journal is not None:
+            # per-worker partition digests let recovery revalidate adopted
+            # children's shards without holding the rows; the matrix
+            # digest keys the replay cache for resubmitted service jobs
+            digest = _array_digest(a)
+            with self._lock:
+                self._tenant_digests[shard_id] = digest
+            self._journal("install", {
+                "shard_id": shard_id,
+                "matrix_digest": digest,
+                "n": code.n, "k": code.k,
+                "generator_kind": code.kind,
+                "chunks": data.chunks,
+                "rows_per_chunk": data.rows_per_chunk,
+                "orig_rows": data.orig_rows,
+                "digests": [shard_digest(p) for p in data.partitions]})
         return data
 
     def load_replicated(self, a: np.ndarray,
@@ -501,6 +647,169 @@ class CodedExecutionEngine:
         finally:
             self.events.put(_Shutdown())
             self._collector.join(timeout=10.0)
+            if self.journal is not None:
+                self.journal.close()
+
+    def crash(self) -> None:
+        """Simulate master death (recovery tests): sever the transport
+        plane WITHOUT stopping the worker processes, sync the journal,
+        and resolve every in-flight handle with :class:`EngineClosed`.
+
+        The surviving children enter reconnect backoff exactly as after a
+        real master SIGKILL; :meth:`recover` (same ``journal_dir``) then
+        adopts them at a bumped epoch and resumes the open rounds from
+        the journal floor.
+        """
+        with self._rounds_lock:
+            if self._closed:
+                return
+            self._closed = True
+            inboxes = list(self._rounds.values())
+        for inbox in inboxes:
+            inbox.put(_EngineClosedSentinel())
+        if self.journal is not None:
+            self.journal.sync()
+            self.journal.close()
+        crash = getattr(self.transport, "crash", None)
+        if crash is not None:
+            crash()
+        else:
+            self.transport.shutdown()
+        self.events.put(_Shutdown())
+        self._collector.join(timeout=10.0)
+
+    # ------------------------------------------------------------------
+    # master restart/recovery
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def recover(cls, cfg: ClusterConfig, injector: SlowdownInjector,
+                compute: ComputeFn = numpy_backend,
+                predictor: Optional[SpeedPredictor] = None,
+                tracer: Optional[Tracer] = None,
+                registry: Optional[MetricsRegistry] = None,
+                transport: Optional[SocketTransport] = None,
+                procs=None) -> "CodedExecutionEngine":
+        """Rebuild a crashed master from its write-ahead journal.
+
+        Replays ``cfg.journal_dir``, binds the journaled port at the old
+        epoch + 1 in adopt mode (surviving worker processes reconnect and
+        revalidate their shards by digest; no new pool is spawned), and
+        resumes every journaled-but-unretired round from its ack floor —
+        journaled chunks are seeded into coverage and into the
+        transport's dedup sets, so they are never recomputed and their
+        at-least-once replay never double-counts.  Resumed rounds are
+        exposed through :attr:`recovered`, keyed by
+        ``(matrix_digest, x_digest, strategy_key)``, which is how
+        :meth:`repro.cluster.service.JobService.recover` resolves
+        resubmitted jobs without recompute.
+
+        ``transport`` may supply a pre-configured :class:`SocketTransport`
+        (e.g. a chaos-armed ``FaultyTransport``); its port/epoch/adopt
+        fields are overridden from the journal.  ``procs`` optionally
+        hands over the crashed transport's child process handles so
+        in-process tests can still reap them at shutdown.
+        """
+        if not cfg.journal_dir:
+            raise ValueError("recover() requires cfg.journal_dir")
+        st = RoundJournal.replay(cfg.journal_dir)
+        if st.meta is None:
+            raise RuntimeError(
+                f"no meta record in {cfg.journal_dir}: nothing to recover")
+        if transport is None:
+            transport = SocketTransport()
+        transport.port = int(st.meta.get("port") or 0)
+        transport.epoch = int(st.meta.get("epoch", 1)) + 1
+        transport.adopt = True
+        transport.adopt_procs = procs
+
+        def seed_endpoint(ep) -> None:
+            # digests let the Rejoin handshake revalidate adopted shards
+            # the master no longer holds; seen-chunk floors make the
+            # children's at-least-once replay idempotent across the epoch
+            for sid, rec in st.installs.items():
+                ep.shard_digests[sid] = rec["digests"][ep.worker_id]
+            for rid, chunks in st.acks.items():
+                if rid in st.retired:
+                    continue
+                for c, entries in chunks.items():
+                    for w_, _res in entries:
+                        if w_ == ep.worker_id:
+                            ep.seed_seen(rid, c)
+        transport.endpoint_seed = seed_endpoint
+
+        engine = cls(cfg, injector, compute=compute, predictor=predictor,
+                     tracer=tracer, registry=registry, transport=transport)
+        with engine._lock:
+            engine._round_seq = max(engine._round_seq, st.round_floor)
+            engine._tenant_seq = max(engine._tenant_seq, st.tenant_floor)
+            for sid, rec in st.installs.items():
+                engine._tenant_digests[sid] = rec["matrix_digest"]
+        engine.journal_state = st
+        open_rounds = st.open_rounds
+        for rid, plan in sorted(open_rounds.items()):
+            install = st.installs.get(plan["shard_id"])
+            if install is None:
+                logger.warning("recovery: round %d references unknown "
+                               "shard %s — skipped", rid, plan["shard_id"])
+                continue
+            # skeleton tenant: decode needs only the code + dimensions,
+            # never the partitions (those live on the adopted children)
+            code = MDSCode(int(install["n"]), int(install["k"]),
+                           install["generator_kind"])
+            data = CodedData(shard_id=plan["shard_id"], code=code,
+                             chunks=int(install["chunks"]),
+                             rows_per_chunk=int(install["rows_per_chunk"]),
+                             orig_rows=int(install["orig_rows"]),
+                             partitions=[])
+            x = decode_array(plan["x"])
+            x.setflags(write=False)
+            strategy = _resolve_strategy(plan["strategy"])
+            handle = engine._resume_round(rid, data, x, strategy,
+                                          st.acks.get(rid, {}))
+            key = (plan["matrix_digest"], plan["x_digest"],
+                   _strategy_key(strategy))
+            engine.recovered[key] = handle
+        engine._m_recoveries.labels(transport=engine._transport_kind).inc()
+        if engine.tracer.enabled:
+            engine.tracer.emit(
+                obs.KIND_RECOVERY,
+                epoch=getattr(transport, "epoch", 0),
+                resumed_rounds=len(engine.recovered),
+                open_jobs=len(st.open_jobs))
+        logger.info("master recovered at epoch %d: %d round(s) resumed, "
+                    "%d admitted job(s) pending",
+                    getattr(transport, "epoch", 0), len(engine.recovered),
+                    len(st.open_jobs))
+        return engine
+
+    def _resume_round(self, rid: int, data: CodedData, x: np.ndarray,
+                      strategy,
+                      seed_acks: Dict[int, List[Tuple[int, np.ndarray]]]
+                      ) -> RoundHandle:
+        """Restart one journaled round under its ORIGINAL round id.
+
+        The id must be stable so the journal's ack floor, the endpoints'
+        seen-chunk dedup sets, and any late partition-era replays all key
+        onto the same round; ``_round_seq`` was already advanced past the
+        journal floor, so fresh rounds never collide with a resumed id.
+        """
+        rid, inbox, inflight = self._register_round(rid=rid)
+        handle = RoundHandle(rid, type(strategy).__name__)
+
+        def drive() -> None:
+            try:
+                out = self._run_coded(rid, inbox, inflight, data, x,
+                                      strategy, seed_acks=seed_acks)
+                handle._finish(out, None)
+            except BaseException as exc:    # surfaced via handle.result()
+                handle._finish(None, exc)
+            finally:
+                self._retire_round(rid)
+
+        threading.Thread(target=drive, name=f"round-{rid}-resumed",
+                         daemon=True).start()
+        return handle
 
     # ------------------------------------------------------------------
     # prediction / observation
@@ -603,6 +912,10 @@ class CodedExecutionEngine:
         # backends may soundly identity-key their device copy of it.
         x = np.array(x, dtype=np.float64, copy=True)
         x.setflags(write=False)
+        # NOTE: keep an explicit flag rather than comparing ``target is
+        # self._run_coded`` below — each attribute access builds a fresh
+        # bound method, so identity is always False
+        coded = False
         if isinstance(strategy, UncodedReplication):
             if not isinstance(data, ReplicatedData):
                 raise TypeError("UncodedReplication needs ReplicatedData "
@@ -613,11 +926,38 @@ class CodedExecutionEngine:
                 raise TypeError(f"{type(strategy).__name__} needs CodedData "
                                 "(use engine.load_matrix)")
             target = self._run_coded
+            coded = True
         else:
             raise TypeError(f"unsupported strategy {type(strategy).__name__}")
 
+        if coded and self.recovered:
+            # replay-cache hit: a resumed recovery round already computes
+            # this exact (matrix, operand, strategy) content — hand back
+            # its handle instead of planning a duplicate round, so
+            # resubmitted service jobs resolve with zero recompute
+            with self._lock:
+                mdigest = self._tenant_digests.get(data.shard_id, "")
+            key = (mdigest, _array_digest(x), _strategy_key(strategy))
+            cached = self.recovered.pop(key, None)
+            if cached is not None:
+                logger.info("round request resolved from the recovery "
+                            "replay cache (resumed round %d)",
+                            cached.round_id)
+                return cached
+
         rid, inbox, inflight = self._register_round()
         handle = RoundHandle(rid, type(strategy).__name__)
+        if self.journal is not None and coded:
+            # write-ahead: the plan is durable before any chunk is
+            # dispatched, so a crash mid-round can always rebuild it
+            with self._lock:
+                mdigest = self._tenant_digests.get(data.shard_id, "")
+            self._journal("plan", {
+                "rid": rid, "shard_id": data.shard_id,
+                "matrix_digest": mdigest,
+                "x_digest": _array_digest(x),
+                "x": encode_array(x),
+                "strategy": _strategy_spec(strategy)})
 
         def drive() -> None:
             try:
@@ -699,7 +1039,10 @@ class CodedExecutionEngine:
 
     # thread: round-driver
     def _run_coded(self, rid: int, inbox: "queue.Queue", inflight: int,
-                   data: CodedData, x: np.ndarray, strategy) -> RoundOutput:
+                   data: CodedData, x: np.ndarray, strategy,
+                   seed_acks: Optional[
+                       Dict[int, List[Tuple[int, np.ndarray]]]] = None
+                   ) -> RoundOutput:
         cfg = self.cfg
         n, k, C = data.n, data.k, data.chunks
         rpc = data.rows_per_chunk
@@ -718,12 +1061,43 @@ class CodedExecutionEngine:
             iteration = self.iteration
 
         state = _RoundState(n, k, C)
+        if seed_acks:
+            # recovery: journaled chunk credits become coverage BEFORE any
+            # dispatch — these chunks are never recomputed
+            for c, entries in sorted(seed_acks.items()):
+                for w_, res in entries:
+                    if len(state.used[c]) >= k or w_ in state.covered_by[c]:
+                        continue
+                    state.covered_by[c].add(w_)
+                    state.used[c].append(w_)
+                    state.partials[(w_, c)] = res
+                    state.need -= 1
+                    state.recovered_chunks += 1
+                if len(state.used[c]) >= k:
+                    state.pending.discard(c)
+            if state.recovered_chunks:
+                self._m_recovered_chunks.labels(
+                    transport=self._transport_kind).inc(
+                        state.recovered_chunks)
+                if self.tracer.enabled:
+                    self.tracer.emit(obs.KIND_ROUND_RESUME, round_id=rid,
+                                     recovered=state.recovered_chunks,
+                                     need=state.need)
+                logger.info("round %d resumed from journal: %d chunk "
+                            "credit(s) seeded, need=%d", rid,
+                            state.recovered_chunks, state.need)
         t0 = time.perf_counter()
         fenced: List[int] = []
         for w in range(n):
             if alloc.count[w] > 0:
                 ids = [int((alloc.begin[w] + j) % C)
                        for j in range(int(alloc.count[w]))]
+                # a resumed round dispatches only what the journal floor
+                # does not already cover (no-op without seeded coverage)
+                ids = [c for c in ids if len(state.used[c]) < k
+                       and w not in state.covered_by[c]]
+                if not ids:
+                    continue
                 if w in self.dead:
                     # the planner can still allocate to a CONFIRMED-dead
                     # worker (its verdict raced this round's plan):
@@ -854,6 +1228,12 @@ class CodedExecutionEngine:
                 w = ev.worker
                 state.last_event_t[w] = ev.t
                 state.failures.append(f"worker {w}: {ev.error}")
+                state.failed_workers.add(w)
+                # remember what the worker had in flight at fence time: any
+                # of these chunks arriving FROM IT later is partition-era
+                # replay, however the rejoin races the event retransmits
+                state.partition_claims.setdefault(w, set()).update(
+                    state.outstanding[w])
                 state.cancelled.add(w)      # stop awaiting it on deadlines
                 lost = sorted(c for c in state.outstanding[w]
                               if len(state.used[c]) < k)
@@ -868,6 +1248,11 @@ class CodedExecutionEngine:
                 if lost:
                     state.orphans |= self._failover_dispatch(
                         state, rid, iteration, data, x, w, lost)
+                continue
+            if isinstance(ev, WorkerRejoined):
+                # the worker is back in planning: credits it earns from
+                # here on are fresh work, not partition-era replay
+                state.failed_workers.discard(ev.worker)
                 continue
             if isinstance(ev, WorkerDone):
                 if ev.round_id != rid:
@@ -926,6 +1311,29 @@ class CodedExecutionEngine:
                 state.used[c].append(w)
                 state.partials[(w, c)] = ev.result
                 state.need -= 1
+                if self.journal is not None:
+                    # durable ack: recovery seeds this credit verbatim
+                    # (the result rides along for a bit-identical decode)
+                    self._journal("ack", {
+                        "rid": rid, "chunk": c, "worker": w,
+                        "result": encode_array(ev.result)})
+                claims = state.partition_claims.get(w)
+                if w in state.failed_workers or (claims and c in claims):
+                    # partition-era work replayed after heal: credited,
+                    # never recomputed (arXiv:1804.10331's argument that
+                    # every unit of completed work should count).  The
+                    # claim set matters because the rejoin handshake rides
+                    # cheap control frames and usually un-fences the worker
+                    # BEFORE its buffered event retransmits drain.
+                    if claims:
+                        claims.discard(c)
+                    state.partition_credits += 1
+                    self._m_partition_credits.labels(
+                        transport=self._transport_kind).inc()
+                    if self.tracer.enabled:
+                        self.tracer.emit(obs.KIND_PARTITION_CREDIT,
+                                         worker=w, round_id=rid,
+                                         chunk_id=c)
                 if len(state.used[c]) >= k:
                     state.pending.discard(c)    # fully covered
                     state.orphans.discard(c)
@@ -1040,8 +1448,12 @@ class CodedExecutionEngine:
             cancelled_workers=len(state.cancelled),
             inflight=inflight, rhs_width=width,
             steals=state.steals, retracted_chunks=state.retracted,
-            worker_failures=tuple(state.failures))
+            worker_failures=tuple(state.failures),
+            recovered_chunks=state.recovered_chunks,
+            partition_credits=state.partition_credits)
         self._publish_round(metrics, state.chunks_done)
+        if self.journal is not None:
+            self._journal("retire", {"rid": rid})
         return RoundOutput(y=y, metrics=metrics)
 
     # thread: round-driver

@@ -51,6 +51,10 @@ class RoundMetrics:
     retracted_chunks: int = 0         # chunks retracted and re-dispatched
     # WorkerFailed reasons seen this round
     worker_failures: Tuple[str, ...] = ()
+    recovered_chunks: int = 0         # coverage seeded from the journal on
+    #                                   master recovery (never recomputed)
+    partition_credits: int = 0        # chunks credited from a SUSPECTED
+    #                                   (partitioned) worker's replay
 
     @property
     def total_useful(self) -> float:

@@ -108,12 +108,22 @@ KIND_OBS_SPEED = "obs_speed"
 KIND_CONN_LOST = "conn_lost"
 KIND_RECONNECT = "reconnect"
 KIND_CHAOS = "chaos"
+#: partition/recovery instants: a SUSPECTED worker completed the Rejoin
+#: handshake and was un-fenced; a chunk computed during a partition was
+#: credited to a still-open round on heal; a recovered master resumed a
+#: journaled round from its ack floor; recovery itself completed
+KIND_REJOIN = "rejoin"
+KIND_PARTITION_CREDIT = "partition_credit"
+KIND_ROUND_RESUME = "round_resume"
+KIND_RECOVERY = "recovery"
 
 SPAN_KINDS = frozenset({KIND_CHUNK, KIND_ROUND_PLAN, KIND_ROUND_DISPATCH,
                         KIND_ROUND_COLLECT, KIND_ROUND_DECODE})
 COUNTER_KINDS = frozenset({KIND_INJ_SPEED, KIND_OBS_SPEED})
 MASTER_KINDS = frozenset({KIND_STEAL, KIND_WAVE, KIND_FAILOVER,
                           KIND_COALESCE, KIND_FAILSTOP_VERDICT,
+                          KIND_PARTITION_CREDIT, KIND_ROUND_RESUME,
+                          KIND_RECOVERY,
                           KIND_ROUND_PLAN, KIND_ROUND_DISPATCH,
                           KIND_ROUND_COLLECT, KIND_ROUND_DECODE})
 

@@ -49,8 +49,10 @@ import numpy as np
 
 from repro.cluster import obs
 from repro.cluster.data import CodedData, replica_placement
-from repro.cluster.master import (CodedExecutionEngine, EngineClosed,
-                                  RoundOutput)
+from repro.cluster.journal import decode_array, encode_array
+from repro.cluster.master import (_STRATEGY_CLASSES, CodedExecutionEngine,
+                                  EngineClosed, RoundOutput,
+                                  _resolve_strategy, _strategy_spec)
 from repro.cluster.metrics import JobMetrics, RoundMetrics, ServiceReport
 from repro.core.strategies import UncodedReplication
 
@@ -368,6 +370,66 @@ class RegressionJob(Job):
         return w
 
 
+# -- admission journaling ---------------------------------------------------
+
+def _job_spec(job: Job) -> Optional[Dict]:
+    """JSON-able admit payload for a journalable job, or ``None``.
+
+    Jobs riding on shared service data (``data=``) reference engine-owned
+    shards the journal does not capture, and replicated strategies have no
+    registered spec — both are admitted without a durable record (their
+    in-flight *rounds* are still journaled and resumed; only the job-level
+    resubmission is unavailable for them).
+    """
+    if job.data is not None:
+        return None
+    if type(job.strategy).__name__ not in _STRATEGY_CLASSES:
+        return None
+    spec: Dict = {"kind": job.kind, "chunks": job.chunks,
+                  "a": encode_array(job.a),
+                  "strategy": _strategy_spec(job.strategy)}
+    if isinstance(job, MatvecJob):
+        spec["xs"] = [encode_array(x) for x in job.xs]
+        spec["batch"] = job.batch
+    elif isinstance(job, PageRankJob):
+        spec["iters"] = job.iters
+        spec["damping"] = job.damping
+    elif isinstance(job, RegressionJob):
+        spec["y"] = encode_array(job.y)
+        spec["epochs"] = job.epochs
+        spec["loss"] = job.loss
+        spec["lr"] = job.lr
+    else:
+        return None                       # unknown subclass: can't rebuild
+    return spec
+
+
+def _job_from_spec(rec: Dict) -> Optional[Job]:
+    """Rebuild a :class:`Job` from a replayed ``admit`` record."""
+    spec = rec.get("job")
+    if not spec:
+        return None
+    try:
+        strategy = _resolve_strategy(spec["strategy"])
+        a = decode_array(spec["a"])
+        kind = spec.get("kind")
+        if kind == "matvec":
+            return MatvecJob(a, [decode_array(x) for x in spec["xs"]],
+                             strategy, chunks=spec["chunks"],
+                             batch=spec.get("batch", 1))
+        if kind == "pagerank":
+            return PageRankJob(a, strategy, iters=spec["iters"],
+                               damping=spec["damping"],
+                               chunks=spec["chunks"])
+        if kind == "regression":
+            return RegressionJob(a, decode_array(spec["y"]), strategy,
+                                 epochs=spec["epochs"], loss=spec["loss"],
+                                 lr=spec["lr"], chunks=spec["chunks"])
+    except Exception as exc:
+        logger.warning("journal: admit record not rebuildable: %s", exc)
+    return None
+
+
 @dataclasses.dataclass
 class JobHandle:
     """Future-like handle returned by submit()."""
@@ -376,6 +438,9 @@ class JobHandle:
     metrics: JobMetrics
     done: threading.Event = dataclasses.field(default_factory=threading.Event)
     output: Optional[np.ndarray] = None
+    #: journal identity (non-empty iff the admission was journaled)
+    uid: str = ""
+    journaled: bool = False
 
     def wait(self, timeout: Optional[float] = None) -> bool:
         return self.done.wait(timeout)
@@ -482,7 +547,15 @@ class JobService:
         metrics = JobMetrics(job_id=jid, kind=job.kind,
                              strategy=type(job.strategy).__name__,
                              t_submit=time.perf_counter())
-        handle = JobHandle(job=job, metrics=metrics)
+        handle = JobHandle(job=job, metrics=metrics, uid=f"j{jid}")
+        if self.engine.journal is not None:
+            # write-ahead admission: durable BEFORE the scheduler can touch
+            # it, so a crash at any later point can rebuild and resubmit
+            spec = _job_spec(job)
+            if spec is not None:
+                self.engine._journal("admit", {"uid": handle.uid,
+                                               "job": spec})
+                handle.journaled = True
         # count BEFORE enqueueing: the scheduler may start (even finish) the
         # job the instant it is queued, and a drain() racing this submit
         # must not observe completed == accepted while the job is live
@@ -501,6 +574,11 @@ class JobService:
             self._m_jobs.labels(kind=job.kind, strategy=metrics.strategy,
                                 status="rejected",
                                 transport=self._tkind).inc()
+            if handle.journaled:
+                # the admit already hit the journal: retire it, or recovery
+                # would resubmit a job the caller was told to retry
+                self.engine._journal("job_done", {"uid": handle.uid,
+                                                  "status": "rejected"})
             if wait is not None and wait > 0:
                 logger.debug("job %d rejected: no queue slot within %.3fs",
                              jid, wait)
@@ -537,6 +615,9 @@ class JobService:
         m.error = "EngineClosed: service closed before the job started"
         self._m_jobs.labels(kind=m.kind, strategy=m.strategy,
                             status="error", transport=self._tkind).inc()
+        if handle.journaled:
+            self.engine._journal("job_done", {"uid": handle.uid,
+                                              "status": "refused"})
         with self._lock:
             self.completed.append(m)
         handle.done.set()
@@ -569,6 +650,52 @@ class JobService:
         for data in shared:
             self.engine.unload(data)
 
+    # -- crash recovery -----------------------------------------------------
+    @classmethod
+    def recover(cls, engine: CodedExecutionEngine,
+                **kwargs) -> "JobService":
+        """Rebuild the service tier on top of a recovered engine.
+
+        Every job the crashed service durably admitted but never resolved
+        is rebuilt from its ``admit`` record and resubmitted under a fresh
+        uid (the old uid is retired with a ``job_done`` record pointing at
+        the resubmission, so a second recovery never doubles it).  Jobs
+        whose rounds the engine already resumed resolve through the
+        engine's replay cache — the resubmission attaches to the resumed
+        round's handle instead of recomputing.  Admissions that cannot be
+        rebuilt (shared-data jobs, unknown kinds) are retired with a
+        warning rather than silently dropped.
+        """
+        svc = cls(engine, **kwargs)
+        st = getattr(engine, "journal_state", None)
+        if st is None:
+            return svc
+        # float the uid sequence past every journaled admission, so fresh
+        # submissions never reuse a uid the journal already knows
+        floor = 0
+        for uid in st.admits:
+            if uid.startswith("j"):
+                try:
+                    floor = max(floor, int(uid[1:]))
+                except ValueError:
+                    pass
+        with svc._lock:
+            svc._seq = max(svc._seq, floor)
+        for uid, rec in sorted(st.open_jobs.items()):
+            job = _job_from_spec(rec)
+            if job is None:
+                logger.warning("recovery: admitted job %s is not "
+                               "rebuildable — retired unresolved", uid)
+                engine._journal("job_done", {"uid": uid,
+                                             "status": "unrecoverable"})
+                continue
+            handle = svc.submit(job)
+            engine._journal("job_done", {"uid": uid,
+                                         "resubmitted_as": handle.uid})
+            logger.info("recovery: job %s resubmitted as %s", uid,
+                        handle.uid)
+        return svc
+
     # -- scheduler side -----------------------------------------------------
     def _run(self) -> None:
         """One scheduler slot: drain the admission queue, one job at a time.
@@ -600,6 +727,7 @@ class JobService:
             self._m_inflight_jobs.set(in_service)
             data = None
             owned = False
+            engine_closed = False
             try:
                 data = handle.job.prepare(self.engine)
                 owned = handle.job.data is None     # shared data outlives jobs
@@ -607,13 +735,27 @@ class JobService:
                     self._exec, data, m.rounds.append)
             except Exception as exc:          # record, don't kill the service
                 m.error = f"{type(exc).__name__}: {exc}"
+                engine_closed = isinstance(exc, EngineClosed)
                 logger.warning("job %d (%s) failed: %s", m.job_id, m.kind,
                                m.error)
             finally:
-                if data is not None and owned:
+                # EngineClosed is the crash itself: the children must keep
+                # their installed shards so the recovery master's rejoin
+                # handshake can revalidate them by digest.  Unloading here
+                # would race the transport teardown and strip shards over
+                # still-open connections, making rejoin unrecoverable.
+                if data is not None and owned and not engine_closed:
                     self.engine.unload(data)
             m.t_done = time.perf_counter()
             status = "error" if m.error else "ok"
+            if handle.journaled and not engine_closed:
+                # resolution is durable before the caller can observe it
+                # (errored jobs resolve too — resubmitting them on recovery
+                # would only re-fail).  An EngineClosed resolution is the
+                # crash itself: the admission must stay open so recovery
+                # resubmits the job instead of losing it.
+                self.engine._journal("job_done", {"uid": handle.uid,
+                                                  "status": status})
             self._m_jobs.labels(kind=m.kind, strategy=m.strategy,
                                 status=status, transport=self._tkind).inc()
             if m.error is None:

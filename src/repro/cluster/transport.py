@@ -67,12 +67,13 @@ from repro.cluster import obs
 from repro.cluster.injectors import TracedInjector
 from repro.cluster.obs import MetricsRegistry, Tracer
 from repro.cluster.worker import (ChunkDone, ChunkTask, Worker, WorkerDone,
-                                  WorkerFailed, numpy_backend)
+                                  WorkerFailed, WorkerRejoined,
+                                  numpy_backend, shard_digest)
 from repro.runtime.elastic import FailureDetector
 
 __all__ = ["Transport", "InProcTransport", "SocketTransport",
            "FaultyTransport", "ChaosConfig", "RemoteWorkerEndpoint",
-           "encode_frame", "decode_frame"]
+           "encode_frame", "decode_frame", "shard_digest"]
 
 logger = logging.getLogger("repro.cluster.transport")
 
@@ -134,6 +135,9 @@ class _HelloAck:                    # master -> child
     t_master: float
     trace_enabled: bool
     hb_interval: float
+    epoch: int = 1                  # fencing token: the master's current
+    #                                 epoch — the child adopts it and stamps
+    #                                 it into every frame it sends from here
 
 
 @dataclasses.dataclass
@@ -156,6 +160,8 @@ class _SubmitTask:
     chunks: List[Tuple[int, int, int]]
     x: np.ndarray
     row_cost: float
+    epoch: int = 0                  # stamped by the master; the child
+    #                                 rejects epochs older than its own
 
 
 @dataclasses.dataclass
@@ -203,17 +209,38 @@ class _Heartbeat:                   # child -> master, every hb_interval
     backlog: int
     backlog_by_round: Dict[int, int]
     idle: bool
+    epoch: int = 0                  # fencing token (see _HelloAck.epoch)
 
 
 @dataclasses.dataclass
 class _EventMsg:                    # child -> master: one worker event
     event: Any                      # ChunkDone | WorkerDone | WorkerFailed
     seq: int = 0                    # per-child monotone id (at-least-once)
+    epoch: int = 0                  # fencing token; the seq namespace is
+    #                                 PER-EPOCH (the child renumbers its
+    #                                 unacked buffer when it adopts a new
+    #                                 epoch, so a restarted master's fresh
+    #                                 floor and the replayed stream agree)
 
 
 @dataclasses.dataclass
 class _EventAck:                    # master -> child: cumulative event ack
     cum_seq: int                    # all seqs <= cum_seq are safe to drop
+
+
+@dataclasses.dataclass
+class _RejoinReq:                   # master -> child: prove your shards
+    epoch: int                      # the epoch the rejoin would re-enter
+
+
+@dataclasses.dataclass
+class _Rejoin:                      # child -> master: rejoin handshake reply
+    worker_id: int
+    epoch: int
+    digests: Dict[str, str]         # shard_id -> content digest of the
+    #                                 child's installed copy; the master
+    #                                 reinstalls over the wire only on
+    #                                 mismatch, then un-fences the worker
 
 
 @dataclasses.dataclass
@@ -235,10 +262,14 @@ class WireSpec:
     injected loss, or an ACK — the *recovery* half of at-least-once
     delivery (chaos attacks the payload message itself; attacking the
     ack too would only turn loss into duplication, which dup covers).
+    ``fenced`` frames carry the epoch fencing token: the dataclass must
+    declare an ``epoch`` field and the receiving side must compare it
+    against its current epoch (s2c2lint S2C205 enforces both).
     """
 
     direction: str
     protected: bool = False
+    fenced: bool = False
 
 
 #: THE protocol table — the single source of truth the chaos exemption
@@ -250,16 +281,18 @@ WIRE_PROTOCOL: Dict[type, WireSpec] = {
     _HelloAck: WireSpec("m2c", protected=True),
     _InstallShard: WireSpec("m2c", protected=True),
     _DropShard: WireSpec("m2c", protected=True),
-    _SubmitTask: WireSpec("m2c"),
+    _SubmitTask: WireSpec("m2c", fenced=True),
     _SubmitAck: WireSpec("c2m", protected=True),
     _CancelTask: WireSpec("m2c"),
     _RetractReq: WireSpec("m2c", protected=True),
     _RetractReply: WireSpec("c2m", protected=True),
     _Promote: WireSpec("m2c"),
     _Stop: WireSpec("m2c", protected=True),
-    _Heartbeat: WireSpec("c2m"),
-    _EventMsg: WireSpec("c2m"),
+    _Heartbeat: WireSpec("c2m", fenced=True),
+    _EventMsg: WireSpec("c2m", fenced=True),
     _EventAck: WireSpec("m2c", protected=True),
+    _RejoinReq: WireSpec("m2c", protected=True, fenced=True),
+    _Rejoin: WireSpec("c2m", protected=True, fenced=True),
     _TraceBatch: WireSpec("c2m"),
 }
 
@@ -329,14 +362,25 @@ class InProcTransport:
 class ChaosConfig:
     """Seeded fault schedule for :class:`FaultyTransport`.
 
-    Per-message fault draws come from one ``random.Random(seed ^ worker)``
-    per worker, so the decision *schedule* is seed-determined (exact
+    Per-message fault draws come from one ``random.Random`` stream per
+    connection, derived from ``(seed, worker, epoch)`` and restarted at
+    every (re)attach — so the decision *schedule* is seed-determined and
+    reproducible across reconnects and master restarts (exact
     interleaving across workers still depends on wall-clock arrival
     order).  ``kill_worker`` SIGKILLs that worker's process after its
     ``kill_after_chunks``-th delivered chunk result — a mid-round
     fail-stop the §4.4 heartbeat monitor must catch.  ``drop_conn_worker``
     force-closes that worker's socket instead (the process survives),
     exercising the reconnect/backoff path.
+
+    ``partition_worker`` arms an **asymmetric one-way partition**: after
+    that worker's ``partition_after_chunks``-th delivered chunk, chaos
+    drops every frame of ``partition_mode`` ("events" = the worker's
+    ``_EventMsg`` stream child→master, "submits" = the master's
+    ``_SubmitTask`` stream master→child) for ``partition_duration_s``
+    seconds, then heals.  Heartbeats keep flowing either way — the
+    monitor must tell "events silent but heartbeats arriving" apart from
+    true silence, fence the worker as SUSPECTED, and rejoin it on heal.
     """
 
     seed: int = 0
@@ -350,6 +394,10 @@ class ChaosConfig:
     kill_after_chunks: int = 3
     drop_conn_worker: Optional[int] = None
     drop_conn_after_chunks: int = 3
+    partition_worker: Optional[int] = None
+    partition_mode: str = "events"          # "events" | "submits"
+    partition_after_chunks: int = 1
+    partition_duration_s: float = 2.0
 
     def __post_init__(self):
         for name in ("p_drop", "p_dup", "p_delay", "p_reorder"):
@@ -362,6 +410,12 @@ class ChaosConfig:
             if not 0.0 <= lo <= hi:
                 raise ValueError(f"ChaosConfig.{name} must satisfy "
                                  f"0 <= lo <= hi, got ({lo!r}, {hi!r})")
+        if self.partition_mode not in ("events", "submits"):
+            raise ValueError("ChaosConfig.partition_mode must be 'events' "
+                             f"or 'submits', got {self.partition_mode!r}")
+        if self.partition_duration_s < 0.0:
+            raise ValueError("ChaosConfig.partition_duration_s must be "
+                             f">= 0, got {self.partition_duration_s!r}")
 
 
 class _DelayScheduler(threading.Thread):
@@ -419,18 +473,36 @@ class _Chaos:
     def __init__(self, cfg: ChaosConfig, transport: "SocketTransport"):
         self.cfg = cfg
         self.transport = transport
-        self._rngs = [random.Random((cfg.seed << 8) ^ w)
-                      for w in range(transport.n_workers)]
+        # per-connection fault streams, derived from (seed, worker, epoch)
+        # and RESTARTED at every attach (see reset_stream): a reconnect or
+        # a master restart replays the same schedule from the top instead
+        # of resuming a shared consumed RNG — that is what keeps the CI
+        # chaos matrix deterministic across partition/recovery scenarios
+        self._rngs = [self._stream(w, transport.epoch)
+                      for w in range(transport.n_workers)]  # guarded_by: _locks[worker]
         self._locks = [threading.Lock() for _ in range(transport.n_workers)]
         self._sched = _DelayScheduler()
         self._sched.start()
         self._chunks_seen: Dict[int, int] = {}   # guarded_by: _trig_lock
         self._killed = False                     # guarded_by: _trig_lock
         self._conn_dropped = False               # guarded_by: _trig_lock
+        # asymmetric one-way partition window (master clock); None = not
+        # started; heal is the window's scheduled end
+        self._partition_until: Optional[float] = None  # guarded_by: _trig_lock
+        self._partition_started = False          # guarded_by: _trig_lock
+        self._partition_healed = False           # guarded_by: _trig_lock
         self._trig_lock = threading.Lock()
 
     def stop(self) -> None:
         self._sched.stop()
+
+    def _stream(self, worker: int, epoch: int) -> random.Random:
+        return random.Random((self.cfg.seed << 20) ^ (epoch << 10) ^ worker)
+
+    def reset_stream(self, worker: int, epoch: int) -> None:
+        """Restart worker's fault stream for a fresh connection at epoch."""
+        with self._locks[worker]:
+            self._rngs[worker] = self._stream(worker, epoch)
 
     # -- fault draw --------------------------------------------------------
     def _decide(self, worker: int) -> Tuple[str, float]:
@@ -460,7 +532,7 @@ class _Chaos:
         logger.debug("chaos: %s %s message of worker %d",
                      action, direction, worker)
 
-    # -- kill / conn-drop triggers ----------------------------------------
+    # -- kill / conn-drop / partition triggers ----------------------------
     def _check_triggers(self, worker: int, msg) -> None:
         c = self.cfg
         if not isinstance(msg, _EventMsg) or \
@@ -473,20 +545,64 @@ class _Chaos:
                     and seen >= c.kill_after_chunks)
             drop = (not self._conn_dropped and c.drop_conn_worker == worker
                     and seen >= c.drop_conn_after_chunks)
+            part = (not self._partition_started
+                    and c.partition_worker == worker
+                    and seen >= c.partition_after_chunks)
             self._killed = self._killed or kill
             self._conn_dropped = self._conn_dropped or drop
+            if part:
+                self._partition_started = True
+                self._partition_until = (time.perf_counter()
+                                         + c.partition_duration_s)
         if kill:
             self._note("kill", worker, "proc")
             self.transport._kill_child(worker, reason="chaos SIGKILL")
         if drop:
             self._note("conn_drop", worker, "rx")
             self.transport.endpoints[worker]._force_close()
+        if part:
+            self._note("partition", worker,
+                       "rx" if c.partition_mode == "events" else "tx")
+            logger.warning("chaos: one-way partition of worker %d (%s) "
+                           "for %.2fs", worker, c.partition_mode,
+                           c.partition_duration_s)
+
+    def _partitioned(self, worker: int, msg, direction: str) -> bool:
+        """True iff the active one-way partition window swallows msg."""
+        c = self.cfg
+        if c.partition_worker != worker:
+            return False
+        if c.partition_mode == "events":
+            hit = direction == "rx" and isinstance(msg, _EventMsg)
+        else:
+            hit = direction == "tx" and isinstance(msg, _SubmitTask)
+        if not hit:
+            return False
+        healed = False
+        with self._trig_lock:
+            until = self._partition_until
+            inside = until is not None and time.perf_counter() < until
+            if until is not None and not inside and \
+                    not self._partition_healed:
+                self._partition_healed = True
+                healed = True
+        if healed:
+            self._note("heal", worker, direction)
+            logger.warning("chaos: partition of worker %d healed", worker)
+        return inside
 
     # -- routing -----------------------------------------------------------
     def route(self, worker: int, msg, deliver: Callable[[], None],
               direction: str) -> None:
         """Apply the schedule to one message; ``deliver`` performs the
         real delivery (master-side handle, or the raw socket send)."""
+        if self._partitioned(worker, msg, direction):
+            # one-way drop: the frame type targeted by the partition never
+            # crosses during the window; everything else (heartbeats, acks,
+            # the other direction) flows normally — that asymmetry is the
+            # point.  No trigger count: a swallowed result is not delivered.
+            self._note("partition_drop", worker, direction)
+            return
         if isinstance(msg, _PROTECTED):
             deliver()
             return
@@ -528,10 +644,17 @@ class RemoteWorkerEndpoint:
         self.worker_id = worker_id
         self.transport = transport
         self.shards: Dict[str, np.ndarray] = {}
+        #: expected content digest per installed shard — filled at
+        #: install time (or seeded from the journal on recovery, where the
+        #: master no longer holds the rows themselves); the Rejoin
+        #: handshake compares the child's digests against this map and
+        #: reinstalls over the wire only on mismatch
+        self.shard_digests: Dict[str, str] = {}
         self.dead = False
         self.proc: Optional[mp.process.BaseProcess] = None
         self.pid: Optional[int] = None
         self._lock = threading.Lock()       # conn swap + offset + hb stats
+        #                                     + epoch/rejoin/partition state
         self._tx_lock = threading.Lock()    # frame writes
         self._conn: Optional[socket.socket] = None
         self.connected = False
@@ -539,6 +662,25 @@ class RemoteWorkerEndpoint:
         self._ever_connected = False
         self.disconnect_t = 0.0
         self.last_seen = 0.0    # guarded_by: _lock  (master clock, any rx)
+        # SUSPECTED fence: a §4.4 verdict whose victim may still be alive
+        # (partition / disconnect, not a dead process) — fenced from
+        # dispatch exactly like dead, but rejoin-eligible
+        self.suspected = False               # guarded_by: _lock
+        # set on recovery-adopted endpoints: the next attach must run the
+        # Rejoin handshake to revalidate shards against shard_digests
+        self.revalidate = False              # guarded_by: _lock
+        self._rejoin_pending = False         # guarded_by: _lock
+        # master clock of the last _EventMsg received (post-chaos) and the
+        # start of the current busy-with-no-events stretch heartbeats
+        # report — together they distinguish "events silent but heartbeats
+        # arriving" (partition suspicion) from true §4.4 silence
+        self.last_event_rx = 0.0             # guarded_by: _lock
+        self._busy_since: Optional[float] = None  # guarded_by: _lock
+        # cross-epoch chunk dedup: (round_id, chunk_id) pairs this worker
+        # already delivered — per-epoch seq numbering can't dedup a replay
+        # that crosses an epoch boundary (fresh floor), this set can.
+        # Seeded from the journal floor on recovery.
+        self._seen_chunks: Set[Tuple[int, int]] = set()  # guarded_by: _lock
         self._offset: Optional[float] = None
         # task bookkeeping: engine task object <-> wire task id
         self._task_seq = itertools.count(1)
@@ -590,9 +732,14 @@ class RemoteWorkerEndpoint:
                recv_t: float) -> None:
         t = self.transport
         refused = False
+        closing = False
         with self._lock:
-            if self.dead or t._closing:
+            # a permanently fenced worker (dead, not suspected) must never
+            # come back; a SUSPECTED one may — through the Rejoin handshake
+            rejoinable = self.suspected and t.allow_rejoin
+            if t._closing or (self.dead and not rejoinable):
                 refused = True
+                closing = t._closing
             else:
                 old = self._conn
                 self._conn = conn
@@ -601,9 +748,16 @@ class RemoteWorkerEndpoint:
                 self.connected = True
                 self.pid = hello.pid
                 self.last_seen = recv_t
+                needs_rejoin = self.suspected or self.revalidate
         if refused:
             try:
-                conn.sendall(encode_frame(_Stop()))
+                # _Stop is a PERMANENT verdict: the child gives up its
+                # reconnect loop and exits.  A crashing/closing transport
+                # must instead go silent (exactly like a SIGKILLed
+                # master) so survivors keep retrying until a recovery
+                # transport adopts them — only a fence sends _Stop.
+                if not closing:
+                    conn.sendall(encode_frame(_Stop()))
                 conn.close()
             except OSError:
                 pass
@@ -614,10 +768,14 @@ class RemoteWorkerEndpoint:
                 old.close()
             except OSError:
                 pass
+        if t.chaos is not None:
+            # fresh connection, fresh fault stream: (seed, worker, epoch)
+            t.chaos.reset_stream(self.worker_id, t.epoch)
         self._raw_send(_HelloAck(
             t_master=time.perf_counter(),
             trace_enabled=t.tracer is not None and t.tracer.enabled,
-            hb_interval=t.hb_interval))
+            hb_interval=t.hb_interval,
+            epoch=t.epoch))
         if reconnect:
             t._m_reconnects.labels(transport=t.kind).inc()
             if t.tracer is not None and t.tracer.enabled:
@@ -629,6 +787,8 @@ class RemoteWorkerEndpoint:
             target=self._read_loop, args=(conn,),
             name=f"transport-rx-{self.worker_id}", daemon=True)
         self._rx_thread.start()
+        if needs_rejoin:
+            self._begin_rejoin()
 
     def _on_conn_lost(self, conn: socket.socket) -> None:
         t = self.transport
@@ -679,9 +839,25 @@ class RemoteWorkerEndpoint:
 
     # -- inbound handling --------------------------------------------------
     def _deliver(self, ev) -> None:
-        # called with self._lock held on the sequenced path (keeps puts
-        # from different chaos-timer threads in seq order); must not take
-        # the lock itself
+        # called with self._lock held (keeps puts from different
+        # chaos-timer threads in seq order and guards the dedup set);
+        # must not take the lock itself
+        if isinstance(ev, ChunkDone):
+            # cross-epoch dedup: per-epoch seqs restart at an epoch bump,
+            # so an at-least-once replay straddling the boundary (master
+            # restart, rejoin) re-presents results the old epoch already
+            # delivered — (round, chunk) content identity catches what
+            # the fresh seq floor cannot.  Within a round a worker is
+            # assigned each chunk at most once, so the key never
+            # collides with legitimate work.
+            key = (ev.round_id, ev.chunk_id)
+            # s2c2lint: ignore[S2C201] _deliver's contract: caller holds _lock
+            if key in self._seen_chunks:
+                t = self.transport
+                t._m_stale.labels(transport=t.kind).inc()
+                return
+            # s2c2lint: ignore[S2C201] _deliver's contract: caller holds _lock
+            self._seen_chunks.add(key)
         off = self.offset
         # rebase worker-stamped clocks onto the master's perf_counter
         # axis so §4.3 deadlines, starvation refs, and the trace all
@@ -693,9 +869,31 @@ class RemoteWorkerEndpoint:
             self.dead = True
         self.transport.events.put(ev)
 
+    def seed_seen(self, round_id: int, chunk_id: int) -> None:
+        """Recovery hook: mark a journaled chunk as already delivered."""
+        with self._lock:
+            self._seen_chunks.add((round_id, chunk_id))
+
     def _handle(self, msg, recv_t: float) -> None:
         t = self.transport
         if isinstance(msg, _EventMsg):
+            if msg.epoch and msg.epoch < t.epoch:
+                # stale-epoch traffic: a frame stamped before the latest
+                # fencing-token bump must not feed the engine
+                t._m_stale.labels(transport=t.kind).inc()
+                return
+            rejoin = False
+            with self._lock:
+                self.last_event_rx = recv_t
+                # an event arriving on a SUSPECTED worker's conn proves
+                # the events path works again (partition healed) — run
+                # the rejoin handshake exactly once per suspicion
+                if self.suspected and t.allow_rejoin and \
+                        not self._rejoin_pending:
+                    self._rejoin_pending = True
+                    rejoin = True
+            if rejoin:
+                self._begin_rejoin(already_pending=True)
             if msg.seq:
                 # in-ORDER at-least-once delivery: the engine's collection
                 # loop inherits the in-process queue's FIFO guarantee (e.g.
@@ -718,8 +916,12 @@ class RemoteWorkerEndpoint:
                 if dup:
                     return          # retransmit/chaos-dup of a seen event
             else:
-                self._deliver(msg.event)
+                with self._lock:
+                    self._deliver(msg.event)
         elif isinstance(msg, _Heartbeat):
+            if msg.epoch and msg.epoch < t.epoch:
+                t._m_stale.labels(transport=t.kind).inc()
+                return
             self._sample_clock(msg.t_worker, recv_t)
             with self._lock:
                 self.busy_s = msg.busy_s
@@ -728,6 +930,16 @@ class RemoteWorkerEndpoint:
                 self._hb_backlog = msg.backlog
                 self._hb_backlog_by_round = msg.backlog_by_round
                 self._hb_idle = msg.idle
+                # busy-with-no-events stretch: heartbeats claim queued or
+                # running work; the monitor pairs this with last_event_rx
+                # to call an events-path partition (§4.4 SUSPECTED)
+                if msg.backlog > 0 or not msg.idle:
+                    if self._busy_since is None:
+                        self._busy_since = recv_t
+                else:
+                    self._busy_since = None
+        elif isinstance(msg, _Rejoin):
+            self._complete_rejoin(msg, recv_t)
         elif isinstance(msg, _TraceBatch):
             if t.tracer is not None and t.tracer.enabled:
                 t.tracer.absorb(msg.records, self.offset)
@@ -747,6 +959,95 @@ class RemoteWorkerEndpoint:
         else:
             logger.debug("worker %d: unknown message %r",
                          self.worker_id, type(msg).__name__)
+
+    # -- rejoin handshake --------------------------------------------------
+    def _begin_rejoin(self, already_pending: bool = False) -> None:
+        """Ask the child to prove its shard contents (digest handshake)."""
+        t = self.transport
+        if not already_pending:
+            with self._lock:
+                if self._rejoin_pending:
+                    return
+                self._rejoin_pending = True
+        logger.info("worker %d: rejoin handshake started (epoch %d)",
+                    self.worker_id, t.epoch)
+        self._raw_send(_RejoinReq(epoch=t.epoch))
+
+    def _complete_rejoin(self, msg: "_Rejoin", recv_t: float) -> None:
+        """Digest-validate the child's shards, reinstall mismatches, and
+        un-fence a SUSPECTED worker back into the planner's speed table.
+
+        Chunk results the worker completed during the partition ride the
+        normal at-least-once event stream (its unacked buffer replays once
+        frames flow again) — they are credited to coverage engine-side if
+        their round is still open, which is the whole point of SUSPECTED
+        over dead: completed work is never thrown away.
+        """
+        t = self.transport
+        if msg.epoch != t.epoch:
+            t._m_stale.labels(transport=t.kind).inc()
+            with self._lock:
+                self._rejoin_pending = False
+            return
+        expected = dict(self.shard_digests)
+        mismatch = [sid for sid, d in expected.items()
+                    if msg.digests.get(sid) != d]
+        reinstalled = []
+        unrecoverable = []
+        for sid in mismatch:
+            rows = self.shards.get(sid)
+            if rows is None:
+                # recovery-adopted endpoint: the master holds digests from
+                # the journal but not the rows — a mismatch here cannot be
+                # repaired over the wire, so the worker stays fenced
+                unrecoverable.append(sid)
+            else:
+                self._raw_send(_InstallShard(sid, rows))
+                reinstalled.append(sid)
+        if unrecoverable:
+            logger.warning(
+                "worker %d: rejoin refused — shard(s) %s fail digest "
+                "validation and the master holds no rows to reinstall",
+                self.worker_id, unrecoverable)
+            with self._lock:
+                self._rejoin_pending = False
+                was_live = not self.dead
+                self.dead = True
+                self.suspected = False
+            if was_live:
+                # a revalidation failure on a never-fenced worker (master
+                # recovery) must fence it NOW: its shard contents are
+                # wrong and any chunk it computed would corrupt decodes
+                t.events.put(WorkerFailed(
+                    self.worker_id, -1, time.perf_counter(),
+                    f"rejoin: shard digest validation failed "
+                    f"({sorted(unrecoverable)})"))
+            return
+        was_fenced = False
+        with self._lock:
+            was_fenced = self.dead or self.suspected
+            self.dead = False
+            self.suspected = False
+            self.revalidate = False
+            self._rejoin_pending = False
+            self._busy_since = None
+            self.last_event_rx = recv_t
+        t._unfence(self.worker_id)
+        if t.tracer is not None and t.tracer.enabled:
+            t.tracer.emit(obs.KIND_REJOIN, worker=self.worker_id,
+                          transport=t.kind, epoch=t.epoch,
+                          reinstalled=len(reinstalled),
+                          source="suspected" if was_fenced else "recovery")
+        logger.info("worker %d: rejoin complete (%d shard(s) reinstalled, "
+                    "%s)", self.worker_id, len(reinstalled),
+                    "un-fenced" if was_fenced else "revalidated")
+        if was_fenced:
+            t._m_rejoins.labels(transport=t.kind).inc()
+            # the collector un-fences the worker engine-side: clears it
+            # from engine.dead, resets its predictor/detector state, and
+            # new rounds plan it again
+            t.events.put(WorkerRejoined(
+                self.worker_id, -1, time.perf_counter()))
 
     # -- outbound ----------------------------------------------------------
     def _raw_send(self, msg) -> bool:
@@ -780,17 +1081,20 @@ class RemoteWorkerEndpoint:
     def install_shard(self, shard_id: str, rows: np.ndarray) -> None:
         rows = np.ascontiguousarray(rows, dtype=np.float64)
         self.shards[shard_id] = rows
+        self.shard_digests[shard_id] = shard_digest(rows)
         self._raw_send(_InstallShard(shard_id, rows))
 
     def drop_shard(self, shard_id: str) -> None:
         self.shards.pop(shard_id, None)
+        self.shard_digests.pop(shard_id, None)
         self._raw_send(_DropShard(shard_id))
 
     def submit(self, task: ChunkTask) -> None:
         tid = next(self._task_seq)
         msg = _SubmitTask(tid, task.round_id, task.iteration,
                           task.shard_id, list(task.chunks),
-                          np.asarray(task.x), task.row_cost)
+                          np.asarray(task.x), task.row_cost,
+                          epoch=self.transport.epoch)
         with self._task_lock:
             self._task_meta[tid] = (task.round_id, task)
             self._task_ids[id(task)] = tid
@@ -918,7 +1222,10 @@ class SocketTransport:
                  connect_timeout: float = 60.0, mp_method: str = "spawn",
                  ack_timeout: Optional[float] = None,
                  max_submit_attempts: int = 10,
-                 chaos: Optional[ChaosConfig] = None):
+                 chaos: Optional[ChaosConfig] = None,
+                 epoch: int = 1, allow_rejoin: bool = True,
+                 adopt: bool = False,
+                 event_silence_factor: float = 8.0):
         self.host = host
         self.port = port
         self.hb_interval = hb_interval
@@ -936,15 +1243,43 @@ class SocketTransport:
         self.max_submit_attempts = max_submit_attempts
         self.chaos_cfg = chaos
         self.chaos: Optional[_Chaos] = None
+        #: fencing token stamped into every master frame; a recovered
+        #: master starts a NEW transport at the old epoch + 1 and both
+        #: sides reject traffic stamped with an older epoch
+        self.epoch = epoch
+        #: a SUSPECTED worker may re-enter through the Rejoin handshake;
+        #: off = every verdict is permanent (pre-rejoin semantics)
+        self.allow_rejoin = allow_rejoin
+        #: adopt mode (master recovery): bind the journaled port and wait
+        #: for the SURVIVING children of the previous epoch to reconnect
+        #: instead of spawning a fresh pool
+        self.adopt = adopt
+        #: optional process handles for adopted children (in-process
+        #: recovery tests hand over the crashed transport's pool so
+        #: shutdown can still reap them; a truly restarted master has none)
+        self.adopt_procs: Optional[List[mp.process.BaseProcess]] = None
+        #: recovery hook: called once per endpoint BEFORE the accept loop
+        #: starts, so journal-derived state (shard digests, seen-chunk
+        #: floors) is in place when the first adopted child attaches
+        self.endpoint_seed: Optional[Callable[["RemoteWorkerEndpoint"],
+                                              None]] = None
+        #: partition suspicion threshold, as a multiple of the heartbeat
+        #: silence window: a worker whose heartbeats claim queued/running
+        #: work for this long while zero events arrive is SUSPECTED —
+        #: generous enough that a straggler's long chunk doesn't trip it
+        self.event_silence_factor = event_silence_factor
         self.n_workers = 0
         self.events: Optional["queue.Queue"] = None
         self.tracer: Optional[Tracer] = None
         self.endpoints: List[RemoteWorkerEndpoint] = []
         self.procs: List[mp.process.BaseProcess] = []
         self._lsock: Optional[socket.socket] = None
+        self.bound_port: Optional[int] = None
         self._closing = False
         self._closed = False
-        self._verdicted: Set[int] = set()
+        self._verdicted: Set[int] = set()    # guarded_by: _verdict_lock
+        self._verdict_lock = threading.Lock()
+        self._detector: Optional[FailureDetector] = None
         self._monitor: Optional[threading.Thread] = None
         self._accept_thread: Optional[threading.Thread] = None
         #: grace budget for a reconnecting child: the sum of its backoff
@@ -975,6 +1310,12 @@ class SocketTransport:
         self._m_chaos = registry.counter(
             "s2c2_transport_chaos_total", "injected transport faults",
             ("transport", "action"))
+        self._m_stale = registry.counter(
+            "s2c2_transport_stale_total",
+            "stale-epoch frames rejected", ("transport",))
+        self._m_rejoins = registry.counter(
+            "s2c2_rejoins_total",
+            "workers un-fenced by the rejoin handshake", ("transport",))
 
     # -- lifecycle ---------------------------------------------------------
     def start(self, cfg, events, injector, compute, tracer, registry):
@@ -991,43 +1332,72 @@ class SocketTransport:
         lsock.listen(2 * cfg.n_workers)
         self._lsock = lsock
         addr = lsock.getsockname()
+        self.bound_port = addr[1]
+        self._detector = FailureDetector(self.n_workers, k=1, slack=1.0,
+                                         dead_after=self.dead_after)
 
         self.endpoints = [RemoteWorkerEndpoint(w, self)
                           for w in range(cfg.n_workers)]
+        if self.adopt:
+            # adopted children carry shards from the previous epoch:
+            # their first attach must run the Rejoin handshake to
+            # revalidate (and reinstall on digest mismatch)
+            for ep in self.endpoints:
+                ep.revalidate = True
+        if self.endpoint_seed is not None:
+            for ep in self.endpoints:
+                self.endpoint_seed(ep)
+        if self.adopt and self.adopt_procs is not None:
+            self.procs = list(self.adopt_procs)
+            for w, p in enumerate(self.adopt_procs[:cfg.n_workers]):
+                self.endpoints[w].proc = p
         self._accept_thread = threading.Thread(
             target=self._accept_loop, name="transport-accept", daemon=True)
         self._accept_thread.start()
 
-        # children get the UNWRAPPED injector (the engine's TracedInjector
-        # holds the master's tracer and a lock) and re-wrap with their own
-        # process-local tracer; the compute backend ships as a spec string
-        # for the known unpicklable backends
-        base_injector = getattr(injector, "inner", injector)
-        spec = _compute_spec(compute)
-        ctx = mp.get_context(self.mp_method)
-        for w in range(cfg.n_workers):
-            p = ctx.Process(
-                target=_worker_main,
-                args=(w, addr[0], addr[1], base_injector, spec,
-                      self.hb_interval, self.reconnect_backoff,
-                      self.reconnect_tries),
-                name=f"s2c2-worker-{w}", daemon=True)
-            p.start()
-            self.endpoints[w].proc = p
-            self.procs.append(p)
+        if not self.adopt:
+            # children get the UNWRAPPED injector (the engine's
+            # TracedInjector holds the master's tracer and a lock) and
+            # re-wrap with their own process-local tracer; the compute
+            # backend ships as a spec string for the known unpicklable
+            # backends
+            base_injector = getattr(injector, "inner", injector)
+            spec = _compute_spec(compute)
+            ctx = mp.get_context(self.mp_method)
+            for w in range(cfg.n_workers):
+                p = ctx.Process(
+                    target=_worker_main,
+                    args=(w, addr[0], addr[1], base_injector, spec,
+                          self.hb_interval, self.reconnect_backoff,
+                          self.reconnect_tries),
+                    name=f"s2c2-worker-{w}", daemon=True)
+                p.start()
+                self.endpoints[w].proc = p
+                self.procs.append(p)
 
         deadline = time.perf_counter() + self.connect_timeout
         for ep in self.endpoints:
             if not ep.connected_evt.wait(
                     max(deadline - time.perf_counter(), 0.0)):
-                self.shutdown()
-                raise RuntimeError(
-                    f"worker {ep.worker_id} did not connect within "
-                    f"{self.connect_timeout}s")
+                if not self.adopt:
+                    self.shutdown()
+                    raise RuntimeError(
+                        f"worker {ep.worker_id} did not connect within "
+                        f"{self.connect_timeout}s")
+                # adopt mode: survivors of the old epoch reconnect on
+                # their own schedule; one that never shows up gets a
+                # fail-stop verdict instead of failing recovery outright
+                with self._verdict_lock:
+                    fresh = ep.worker_id not in self._verdicted
+                    self._verdicted.add(ep.worker_id)
+                if fresh:
+                    self._issue_verdict(ep.worker_id, time.perf_counter())
         self._monitor = threading.Thread(
             target=self._monitor_loop, name="transport-monitor", daemon=True)
         self._monitor.start()
-        logger.info("socket transport up: %d worker processes on %s:%d",
+        logger.info("socket transport up (epoch %d%s): %d worker processes "
+                    "on %s:%d", self.epoch,
+                    ", adopted" if self.adopt else "",
                     cfg.n_workers, addr[0], addr[1])
         return self.endpoints
 
@@ -1073,9 +1443,9 @@ class SocketTransport:
         §4.4 fail-stop verdict, exactly as in-engine detection does at
         round granularity.
         """
-        det = FailureDetector(self.n_workers, k=1, slack=1.0,
-                              dead_after=self.dead_after)
+        det = self._detector
         silence = self.hb_miss * self.hb_interval
+        ev_silence = silence * self.event_silence_factor
         while not self._closing:
             time.sleep(self.hb_interval)
             if self._closing:
@@ -1084,14 +1454,28 @@ class SocketTransport:
             for ep in self.endpoints:
                 ep._resend_unacked(now)
             resp = np.ones(self.n_workers)
+            with self._verdict_lock:
+                verdicted = set(self._verdicted)
             for ep in self.endpoints:
                 w = ep.worker_id
-                if w in self._verdicted:
+                if w in verdicted:
                     resp[w] = np.inf
                     continue
                 if ep.connected:
                     if now - ep.last_seen > silence:
                         resp[w] = np.inf
+                    else:
+                        # asymmetric partition: heartbeats keep arriving
+                        # and claim queued/running work, yet the events
+                        # channel has been silent far past the heartbeat
+                        # window — the c2m event direction is cut
+                        with ep._lock:
+                            busy_since = ep._busy_since
+                            ev_rx = ep.last_event_rx
+                        if busy_since is not None and \
+                                now - busy_since > ev_silence and \
+                                now - ev_rx > ev_silence:
+                            resp[w] = np.inf
                 elif ep.proc is not None and not ep.proc.is_alive():
                     resp[w] = np.inf
                 elif ep._ever_connected and \
@@ -1099,31 +1483,66 @@ class SocketTransport:
                     resp[w] = np.inf
                 # else: still connecting / inside the grace window
             verdict = det.evaluate(resp)
-            for w in sorted(verdict["dead"] - self._verdicted):
-                self._verdicted.add(w)
+            with self._verdict_lock:
+                fresh = sorted(verdict["dead"] - self._verdicted)
+                self._verdicted.update(fresh)
+            for w in fresh:
                 self._issue_verdict(w, now)
 
     def _issue_verdict(self, w: int, now: float) -> None:
+        """§4.4 fail-stop verdict, classified by what we know of the worker.
+
+        A dead child process is a PERMANENT verdict (the pre-rejoin
+        semantics: fence, kill, never readmit).  A worker whose process is
+        still alive — heartbeat silence, a dropped connection past its
+        grace window, or a one-way partition — is merely SUSPECTED when
+        ``allow_rejoin`` is on: it is fenced out of planning exactly like
+        a dead worker, but a later reconnect runs the Rejoin handshake
+        and un-fences it.  Either way the collector sees a synthetic
+        WorkerFailed so open rounds fail over immediately.
+        """
         ep = self.endpoints[w]
-        ep.dead = True
+        proc_dead = ep.proc is not None and not ep.proc.is_alive()
+        suspected = self.allow_rejoin and not proc_dead
+        if proc_dead:
+            source = "proc-exit"
+        elif ep.connected:
+            source = "partition"       # conn up, events/heartbeats stalled
+        else:
+            source = "silence"
+        with ep._lock:
+            ep.dead = True
+            ep.suspected = suspected
         self._m_verdicts.labels(transport=self.kind).inc()
         if self.tracer is not None and self.tracer.enabled:
             self.tracer.emit(obs.KIND_FAILSTOP_VERDICT, worker=w,
-                             transport=self.kind, source="heartbeat")
-        logger.warning("worker %d: §4.4 heartbeat verdict — fail-stop "
-                       "(fencing the process)", w)
-        # fence: a verdicted worker must never come back half-alive
-        if ep.proc is not None and ep.proc.is_alive():
-            try:
-                ep.proc.kill()
-            except (OSError, ValueError):
-                pass
-        ep._force_close()
+                             transport=self.kind, source=source,
+                             suspected=suspected)
+        logger.warning("worker %d: §4.4 heartbeat verdict — %s (%s)", w,
+                       "SUSPECTED, rejoin-eligible" if suspected
+                       else "fail-stop, fencing the process", source)
+        if not suspected:
+            # fence: a permanently verdicted worker must never come back
+            # half-alive
+            if ep.proc is not None and ep.proc.is_alive():
+                try:
+                    ep.proc.kill()
+                except (OSError, ValueError):
+                    pass
+            ep._force_close()
         # synthetic crash event: the collector broadcasts WorkerFailed to
         # every live round, which fail over via _failover_dispatch — the
         # round completes on the survivors instead of waiting out §4.3
         self.events.put(WorkerFailed(
-            w, -1, now, "transport: heartbeat silence — fail-stop verdict"))
+            w, -1, now, f"transport: {source} — fail-stop verdict"))
+
+    def _unfence(self, w: int) -> None:
+        """Clear a SUSPECTED worker's verdict after a completed rejoin."""
+        with self._verdict_lock:
+            self._verdicted.discard(w)
+        det = self._detector
+        if det is not None:
+            det.reset_worker(w)
 
     def _kill_child(self, w: int, reason: str = "") -> None:
         """SIGKILL a worker process (chaos trigger / verdict fencing)."""
@@ -1140,6 +1559,57 @@ class SocketTransport:
         for ep in self.endpoints:
             ep.round_retired(round_id)
 
+    def _close_lsock(self) -> None:
+        """Really stop listening: shutdown() before close().
+
+        The accept thread blocks inside ``accept()``, and on Linux a
+        plain ``close()`` from another thread does NOT interrupt it —
+        the kernel socket stays accepting, so a child reconnecting into
+        the crash window would complete its TCP handshake against a
+        zombie listener.  ``shutdown()`` wakes the blocked ``accept()``
+        with an error first.
+        """
+        if self._lsock is None:
+            return
+        try:
+            self._lsock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass                    # not connected / already gone
+        try:
+            self._lsock.close()
+        except OSError:
+            pass
+
+    def crash(self) -> None:
+        """Simulate master death: sever the master plane, keep children.
+
+        Unlike :meth:`shutdown` no ``_Stop`` is sent and the worker
+        processes are NOT joined or killed — they observe the dropped
+        connections and enter their reconnect backoff, exactly as they
+        would if the master process were SIGKILLed.  A recovery transport
+        (``adopt=True``, same port, epoch + 1) then adopts the survivors.
+        """
+        if self._closed:
+            return
+        self._closed = True
+        self._closing = True
+        if self.chaos is not None:
+            self.chaos.stop()
+        self._close_lsock()
+        for ep in self.endpoints:
+            with ep._lock:
+                conn, ep._conn = ep._conn, None
+                ep.connected = False
+            if conn is not None:
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+        if self._monitor is not None:
+            self._monitor.join(timeout=2.0)
+        # deliberately orphan the children: self.procs keeps the handles
+        # so a recovery transport (or test teardown) can adopt/kill them
+
     def shutdown(self) -> None:
         if self._closed:
             return
@@ -1149,11 +1619,7 @@ class SocketTransport:
             self.chaos.stop()
         for ep in self.endpoints:
             ep.stop()               # best-effort _Stop for a clean exit
-        if self._lsock is not None:
-            try:
-                self._lsock.close()
-            except OSError:
-                pass
+        self._close_lsock()
         for p in self.procs:
             p.join(timeout=2.0)
         for p in self.procs:
@@ -1259,6 +1725,10 @@ class _ChildNode:
         self._ev_seq = 0                     # guarded_by: _ev_lock
         self._ev_unacked: List[List] = []    # guarded_by: _ev_lock
         self._ev_lock = threading.Lock()
+        # fencing token adopted from the newest _HelloAck; event seqs are
+        # namespaced PER EPOCH, so adopting a new epoch renumbers the
+        # unacked buffer (a recovered master's ack floor starts at 0)
+        self.epoch = 0                       # guarded_by: _ev_lock
 
     # -- tx ----------------------------------------------------------------
     def _send(self, msg) -> bool:
@@ -1310,6 +1780,7 @@ class _ChildNode:
                     if isinstance(ack, _HelloAck):
                         self.tracer.enabled = ack.trace_enabled
                         self.hb_interval = ack.hb_interval
+                        self._adopt_epoch(ack.epoch)
                         self._sock = s
                         self._connected.set()
                         return True
@@ -1320,6 +1791,30 @@ class _ChildNode:
                 delay *= 2
         return False
 
+    def _adopt_epoch(self, epoch: int) -> None:
+        """Adopt the master's fencing token (per-_HelloAck / _RejoinReq).
+
+        Event seqs are per-epoch: a recovered master's cumulative-ack
+        floor restarts at 0, so the unacked backlog is renumbered 1..len
+        and retransmitted under the new epoch — still exactly-once on the
+        master side thanks to the (round, chunk) dedup set.
+        """
+        with self._ev_lock:
+            if epoch == self.epoch:
+                return
+            self.epoch = epoch
+            for i, rec in enumerate(self._ev_unacked):
+                rec[0] = i + 1
+                rec[2] = 0.0        # due immediately at the next sweep
+            self._ev_seq = len(self._ev_unacked)
+        # the submit-dedup map is ALSO per-epoch: a recovered master's
+        # task counter restarts at 1, so surviving entries from the old
+        # epoch would swallow fresh submits that recycle an id (acked,
+        # never executed).  Old-epoch tasks already queued run to
+        # completion regardless — only the id namespace resets.
+        with self._tasks_lock:
+            self.tasks.clear()
+
     # -- pumps -------------------------------------------------------------
     def _event_pump(self) -> None:
         while True:
@@ -1329,21 +1824,23 @@ class _ChildNode:
             with self._ev_lock:
                 self._ev_seq += 1
                 seq = self._ev_seq
+                epoch = self.epoch
                 self._ev_unacked.append([seq, ev, time.perf_counter()])
             # best-effort first send; loss (chaos, disconnect window) is
             # repaired by the retransmit sweep until the master's ack lands
-            self._send(_EventMsg(ev, seq))
+            self._send(_EventMsg(ev, seq, epoch=epoch))
 
     def _retransmit_events(self, now: float) -> None:
         timeout = max(4 * self.hb_interval, 0.2)
         due: List[Tuple[int, Any]] = []
         with self._ev_lock:
+            epoch = self.epoch
             for rec in self._ev_unacked:
                 if now - rec[2] >= timeout:
                     rec[2] = now
                     due.append((rec[0], rec[1]))
         for seq, ev in due:
-            self._send(_EventMsg(ev, seq))
+            self._send(_EventMsg(ev, seq, epoch=epoch))
 
     def _heartbeat_pump(self) -> None:
         seq = 0
@@ -1364,18 +1861,29 @@ class _ChildNode:
                 if records:
                     self._send(_TraceBatch(self.worker_id, records))
             seq += 1
+            with self._ev_lock:
+                epoch = self.epoch
             self._send(_Heartbeat(
                 worker_id=self.worker_id, seq=seq, t_worker=now,
                 busy_s=w.busy_s, idle_s=w.idle_seconds(now),
                 retracted_total=w.retracted_total,
                 backlog=w.backlog(),
                 backlog_by_round=w.backlog_by_round(),
-                idle=w.idle()))
+                idle=w.idle(), epoch=epoch))
 
     # -- control -----------------------------------------------------------
     def _handle(self, msg) -> None:
         w = self.worker
         if isinstance(msg, _SubmitTask):
+            with self._ev_lock:
+                epoch = self.epoch
+            if msg.epoch and msg.epoch < epoch:
+                # stale-epoch submit from a fenced (pre-crash) master:
+                # drop WITHOUT acking so the zombie can't make progress
+                logger.warning("worker %d: dropping stale-epoch submit "
+                               "(epoch %d < %d)", self.worker_id,
+                               msg.epoch, epoch)
+                return
             # ack first (protected from chaos), then dedup: a retransmit
             # of a submit we already queued/ran must not recompute
             self._send(_SubmitAck(msg.task_id))
@@ -1410,6 +1918,20 @@ class _ChildNode:
             with self._ev_lock:
                 self._ev_unacked = [r for r in self._ev_unacked
                                     if r[0] > msg.cum_seq]
+        elif isinstance(msg, _RejoinReq):
+            # rejoin handshake: adopt the (possibly new) epoch, then prove
+            # our installed shards by content digest — the master
+            # reinstalls only the mismatches over the wire
+            with self._ev_lock:
+                epoch = self.epoch
+            if msg.epoch >= epoch:
+                self._adopt_epoch(msg.epoch)
+                self._send(_Rejoin(self.worker_id, msg.epoch,
+                                   w.shard_digests()))
+            else:
+                logger.warning("worker %d: ignoring stale-epoch rejoin "
+                               "request (epoch %d < %d)", self.worker_id,
+                               msg.epoch, epoch)
         elif isinstance(msg, _Promote):
             w.promote_round(msg.round_id)
         elif isinstance(msg, _InstallShard):

@@ -52,6 +52,7 @@ copy of each shard instead of re-uploading rows on every chunk.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import logging
 import threading
 import time
@@ -65,8 +66,9 @@ import numpy as np
 from repro.cluster import obs
 from repro.cluster.obs import NULL_TRACER, Tracer
 
-__all__ = ["ChunkTask", "ChunkDone", "WorkerDone", "WorkerFailed", "Worker",
-           "numpy_backend", "kernel_backend", "KernelBackend", "rhs_width"]
+__all__ = ["ChunkTask", "ChunkDone", "WorkerDone", "WorkerFailed",
+           "WorkerRejoined", "Worker", "numpy_backend", "kernel_backend",
+           "KernelBackend", "rhs_width", "shard_digest"]
 
 logger = logging.getLogger("repro.cluster.worker")
 
@@ -150,6 +152,33 @@ class WorkerFailed:
     t: float
     error: str
     t_start: float = 0.0
+
+
+@dataclasses.dataclass
+class WorkerRejoined:
+    """A SUSPECTED (partitioned/silent) worker completed the Rejoin
+    handshake: its shards are digest-verified and it is un-fenced back
+    into planning.  ``round_id`` is always -1 — rejoin is a worker-scope
+    event the collector broadcasts, not a round outcome.
+    """
+
+    worker: int
+    round_id: int
+    t: float
+    t_start: float = 0.0
+
+
+def shard_digest(rows: np.ndarray) -> str:
+    """Content digest of an installed shard (rejoin revalidation).
+
+    Covers the raw bytes plus shape and dtype, so a truncated or
+    re-typed shard never digests equal to the master's copy.
+    """
+    arr = np.ascontiguousarray(rows)
+    h = hashlib.sha256()
+    h.update(str((arr.shape, str(arr.dtype))).encode())
+    h.update(arr.tobytes())
+    return h.hexdigest()
 
 
 def numpy_backend(a_rows: np.ndarray, x: np.ndarray) -> np.ndarray:
@@ -413,6 +442,12 @@ class Worker(threading.Thread):
             self.shards.pop(shard_id, None)
         if self._compute_drop is not None:
             self._compute_drop(self.worker_id, shard_id)
+
+    def shard_digests(self) -> Dict[str, str]:
+        """Content digests of every installed shard (rejoin handshake)."""
+        with self._shard_lock:
+            items = list(self.shards.items())
+        return {sid: shard_digest(rows) for sid, rows in items}
 
     # -- dispatch ----------------------------------------------------------
     def submit(self, task: ChunkTask) -> None:

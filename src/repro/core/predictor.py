@@ -187,6 +187,16 @@ class SpeedPredictor:
     def observe(self, speeds: np.ndarray) -> None:
         self.history.append(np.asarray(speeds, dtype=np.float64))
 
+    def reset_worker(self, worker: int) -> None:
+        """Forget one worker's history (rejoin after a partition/fence).
+
+        Its column is rewritten to the nominal speed 1.0 across the
+        window, so the next prediction treats the rejoined worker as a
+        fresh node instead of extrapolating its pre-partition collapse.
+        """
+        for h in self.history:
+            h[worker] = 1.0
+
     def predict(self) -> np.ndarray:
         if not self.history:
             return np.ones(self.n_nodes)

@@ -64,6 +64,10 @@ class FailureDetector:
                 "stragglers": set(np.nonzero(timed_out & ~dead)[0].tolist()),
                 "dead": set(np.nonzero(dead)[0].tolist())}
 
+    def reset_worker(self, worker: int) -> None:
+        """Forget a worker's strikes (rejoin after a cleared verdict)."""
+        self.timeout_strikes[worker] = 0
+
 
 @dataclasses.dataclass
 class ElasticPlan:

@@ -359,6 +359,147 @@ class TestWireProtocol:
                    for f in found)
 
 
+# fenced-frame variant: _Ping carries the epoch token and the child
+# handler checks it — the S2C205 fencing happy path
+TRANSPORT_FENCED = """
+    import dataclasses
+
+
+    class WireSpec:
+        def __init__(self, direction, protected=False, fenced=False):
+            self.direction = direction
+            self.protected = protected
+            self.fenced = fenced
+
+
+    @dataclasses.dataclass
+    class _Ping:
+        x: int
+        epoch: int
+
+
+    @dataclasses.dataclass
+    class _Pong:
+        x: int
+
+
+    WIRE_PROTOCOL = {
+        _Ping: WireSpec("m2c", protected=True, fenced=True),
+        _Pong: WireSpec("c2m"),
+    }
+
+    _PROTECTED = tuple(c for c, s in WIRE_PROTOCOL.items() if s.protected)
+
+
+    class MasterEndpoint:
+        def on_msg(self, msg):
+            if isinstance(msg, _Pong):
+                pass
+
+        def send(self):
+            self._send(_Ping(1, 1))
+
+
+    class _ChildNode:
+        epoch = 0
+
+        def on_msg(self, msg):
+            if isinstance(msg, _Ping):
+                if msg.epoch < self.epoch:
+                    return
+
+        def reply(self):
+            self._send(_Pong(2))
+
+
+    class Chaos:
+        def route(self, msg):
+            if isinstance(msg, _PROTECTED):
+                return True
+"""
+
+
+class TestFencedFrames:
+    def test_fenced_protocol_is_clean(self, tmp_path):
+        assert lint(tmp_path, {"transport.py": TRANSPORT_FENCED},
+                    select=["S2C205"]) == []
+
+    def test_fenced_frame_without_epoch_field(self, tmp_path):
+        src = TRANSPORT_FENCED.replace(
+            "        x: int\n        epoch: int", "        x: int", 1)
+        found = lint(tmp_path, {"transport.py": src}, select=["S2C205"])
+        assert any("declares no 'epoch' field" in f.message for f in found)
+
+    def test_fenced_frame_accepted_without_epoch_check(self, tmp_path):
+        src = TRANSPORT_FENCED.replace(
+            "            if isinstance(msg, _Ping):\n"
+            "                if msg.epoch < self.epoch:\n"
+            "                    return",
+            "            if isinstance(msg, _Ping):\n"
+            "                pass")
+        found = lint(tmp_path, {"transport.py": src}, select=["S2C205"])
+        assert any("without an epoch comparison" in f.message
+                   for f in found)
+
+
+JOURNAL_OK = """
+    JOURNAL_KINDS = {
+        "meta": "identity",
+        "ack": "collected chunk",
+    }
+
+
+    class RoundJournal:
+        def append_record(self, kind, payload):
+            if kind not in JOURNAL_KINDS:
+                raise ValueError(kind)
+
+        @classmethod
+        def replay(cls, path):
+            for rec in []:
+                kind = rec.get("kind")
+                if kind == "meta":
+                    pass
+                elif kind == "ack":
+                    pass
+"""
+
+MASTER_JOURNALS = """
+    class Engine:
+        def collect(self):
+            self._journal("ack", {"chunk": 1})
+"""
+
+
+class TestJournalKinds:
+    def test_consistent_journal_is_clean(self, tmp_path):
+        found = lint(tmp_path, {"transport.py": TRANSPORT_OK,
+                                "journal.py": JOURNAL_OK,
+                                "master.py": MASTER_JOURNALS},
+                     select=["S2C205"])
+        assert found == []
+
+    def test_unregistered_kind_at_append_site(self, tmp_path):
+        master = MASTER_JOURNALS.replace('"ack"', '"bogus"')
+        found = lint(tmp_path, {"transport.py": TRANSPORT_OK,
+                                "journal.py": JOURNAL_OK,
+                                "master.py": master},
+                     select=["S2C205"])
+        assert any("'bogus' is appended but not registered" in f.message
+                   for f in found)
+
+    def test_registered_kind_never_folded_by_replay(self, tmp_path):
+        journal = JOURNAL_OK.replace(
+            "                elif kind == \"ack\":\n"
+            "                    pass\n", "")
+        found = lint(tmp_path, {"transport.py": TRANSPORT_OK,
+                                "journal.py": journal,
+                                "master.py": MASTER_JOURNALS},
+                     select=["S2C205"])
+        assert any("'ack' is registered but never folded" in f.message
+                   for f in found)
+
+
 class TestSuppressions:
     BAD = """
         import threading

@@ -1,0 +1,428 @@
+"""Partition tolerance, epoch fencing, and master restart/recovery (PR 9).
+
+Three layers:
+
+* unit — the round journal round-trips (including a torn final line), and
+  both transport sides reject stale-epoch frames / dedup replayed chunk
+  results across an epoch boundary;
+* integration — a mid-round master crash + ``recover()`` resumes the open
+  round from the journal floor with zero recompute of journaled chunks
+  and a decode bit-identical to an uninterrupted run;
+* integration — a seeded asymmetric one-way partition fences the victim
+  as SUSPECTED, its partition-era chunk results are credited (never
+  recomputed) once the partition heals, and the rejoined worker is
+  planned into fresh rounds.
+
+The CI ``chaos`` matrix runs this file across seeds via ``CHAOS_SEED``.
+"""
+
+import os
+import queue
+import time
+
+import numpy as np
+import pytest
+
+from repro.cluster import (ChaosConfig, ClusterConfig, CodedExecutionEngine,
+                           ChunkDone, EngineClosed, FaultyTransport,
+                           JobService, MatvecJob, NoSlowdown, SocketTransport,
+                           TraceInjector, Tracer)
+from repro.cluster.journal import (JOURNAL_KINDS, JournalState, RoundJournal,
+                                   decode_array, encode_array)
+from repro.cluster.obs import KIND_ENQUEUE, KIND_REJOIN, MetricsRegistry
+from repro.cluster.transport import (_ChildNode, _EventMsg, _Heartbeat,
+                                     _SubmitTask, RemoteWorkerEndpoint)
+from repro.core.strategies import GeneralS2C2
+
+SEED = int(os.environ.get("CHAOS_SEED", "0"))
+
+
+def _wait(pred, timeout=15.0, interval=0.02):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return True
+        time.sleep(interval)
+    return pred()
+
+
+# ---------------------------------------------------------------------------
+# journal unit tests
+# ---------------------------------------------------------------------------
+
+class TestRoundJournal:
+    def test_roundtrip_all_kinds(self, tmp_path):
+        j = RoundJournal(str(tmp_path), fsync_every=2)
+        res = np.arange(4, dtype=np.float64)
+        j.append_record("meta", {"port": 1234, "epoch": 3})
+        j.append_record("install", {"shard_id": "t1", "n": 3, "k": 2})
+        j.append_record("plan", {"rid": 1, "shard_id": "t1"})
+        j.append_record("plan", {"rid": 7, "shard_id": "t1"})
+        j.append_record("ack", {"rid": 1, "chunk": 0, "worker": 2,
+                                "result": encode_array(res)})
+        j.append_record("retire", {"rid": 7})
+        j.append_record("admit", {"uid": "j1", "job": {}})
+        j.append_record("admit", {"uid": "j2", "job": {}})
+        j.append_record("job_done", {"uid": "j1", "status": "ok"})
+        j.close()
+
+        st = RoundJournal.replay(str(tmp_path))
+        assert st.meta["port"] == 1234 and st.meta["epoch"] == 3
+        assert set(st.open_rounds) == {1}          # 7 was retired
+        assert st.round_floor == 7
+        (w, arr), = st.acks[1][0]
+        assert w == 2
+        np.testing.assert_array_equal(arr, res)
+        assert set(st.open_jobs) == {"j2"}
+
+    def test_torn_final_line_tolerated(self, tmp_path):
+        j = RoundJournal(str(tmp_path))
+        j.append_record("meta", {"port": 1, "epoch": 1})
+        j.append_record("plan", {"rid": 1, "shard_id": "t1"})
+        j.close()
+        with open(j.path, "a", encoding="utf-8") as fh:
+            fh.write('{"kind": "ack", "rid": 1, "chu')   # crash mid-append
+        st = RoundJournal.replay(str(tmp_path))
+        assert st.meta is not None and set(st.open_rounds) == {1}
+        assert st.acks == {}
+
+    def test_unregistered_kind_rejected(self, tmp_path):
+        j = RoundJournal(str(tmp_path))
+        with pytest.raises(ValueError, match="unregistered"):
+            j.append_record("bogus", {})
+        j.close()
+        assert "bogus" not in JOURNAL_KINDS
+
+    def test_array_codec_roundtrips_exactly(self):
+        rng = np.random.default_rng(3)
+        arr = rng.standard_normal((5, 3))
+        back = decode_array(encode_array(arr))
+        assert back.dtype == arr.dtype and np.array_equal(back, arr)
+
+
+# ---------------------------------------------------------------------------
+# epoch fencing unit tests (no sockets: frames handed to the handlers)
+# ---------------------------------------------------------------------------
+
+def _master_endpoint(epoch=2):
+    t = SocketTransport(epoch=epoch)
+    t.events = queue.Queue()
+    t._declare_metrics(MetricsRegistry())
+    return t, RemoteWorkerEndpoint(0, t)
+
+
+class TestEpochFencing:
+    def test_master_rejects_stale_event(self):
+        t, ep = _master_endpoint(epoch=2)
+        ev = ChunkDone(0, 1, 0, np.zeros(2), t=0.0)
+        ep._handle(_EventMsg(ev, seq=1, epoch=1), 0.0)
+        assert t.events.empty()
+        assert t.registry.value("s2c2_transport_stale_total") == 1.0
+        ep._handle(_EventMsg(ev, seq=1, epoch=2), 0.0)
+        assert isinstance(t.events.get_nowait(), ChunkDone)
+
+    def test_master_rejects_stale_heartbeat(self):
+        t, ep = _master_endpoint(epoch=2)
+        hb = dict(worker_id=0, seq=1, t_worker=0.0, busy_s=5.0, idle_s=0.0,
+                  retracted_total=0, backlog=1, backlog_by_round={},
+                  idle=False)
+        ep._handle(_Heartbeat(epoch=1, **hb), 0.0)
+        assert ep.busy_s == 0.0
+        assert t.registry.value("s2c2_transport_stale_total") == 1.0
+        ep._handle(_Heartbeat(epoch=2, **hb), 0.0)
+        assert ep.busy_s == 5.0 and ep._busy_since is not None
+
+    def test_chunk_dedup_across_epoch_boundary(self):
+        # per-epoch seqs restart at an epoch bump, so an at-least-once
+        # replay of an already-journaled result must be deduped by
+        # (round, chunk) content identity, not by seq
+        t, ep = _master_endpoint(epoch=2)
+        ep.seed_seen(5, 3)                       # journaled in epoch 1
+        ep._handle(_EventMsg(ChunkDone(0, 5, 3, np.ones(2), t=0.0),
+                             seq=1, epoch=2), 0.0)
+        assert t.events.empty()                  # replay swallowed
+        assert t.registry.value("s2c2_transport_stale_total") == 1.0
+        ep._handle(_EventMsg(ChunkDone(0, 5, 4, np.ones(2), t=0.0),
+                             seq=2, epoch=2), 0.0)
+        assert isinstance(t.events.get_nowait(), ChunkDone)
+        ep._handle(_EventMsg(ChunkDone(0, 5, 4, np.ones(2), t=0.0),
+                             seq=3, epoch=2), 0.0)
+        assert t.events.empty()                  # duplicate counted once
+
+    def test_child_drops_stale_submit_without_ack(self):
+        node = _ChildNode(0, "127.0.0.1", 9, NoSlowdown(), "numpy",
+                          hb_interval=0.05, reconnect_backoff=0.05,
+                          reconnect_tries=1)
+        node._adopt_epoch(2)
+        sub = dict(task_id=1, round_id=1, iteration=0, shard_id="t1",
+                   chunks=[(0, 0, 4)], x=np.zeros(4), row_cost=1e-4)
+        node._handle(_SubmitTask(epoch=1, **sub))
+        assert node.tasks == {}                  # dropped, zombie fenced
+        node._handle(_SubmitTask(epoch=2, **sub))
+        assert 1 in node.tasks
+
+    def test_child_epoch_adoption_resets_task_dedup(self):
+        # a recovered master's task counter restarts at 1: ids from the
+        # old epoch must not swallow fresh submits that recycle them
+        node = _ChildNode(0, "127.0.0.1", 9, NoSlowdown(), "numpy",
+                          hb_interval=0.05, reconnect_backoff=0.05,
+                          reconnect_tries=1)
+        node._adopt_epoch(2)
+        node._handle(_SubmitTask(1, 1, 0, "t1", [(0, 0, 4)], np.zeros(4),
+                                 1e-4, epoch=2))
+        assert node.tasks[1].round_id == 1
+        node._adopt_epoch(3)
+        node._handle(_SubmitTask(1, 8, 0, "t1", [(0, 0, 4)], np.zeros(4),
+                                 1e-4, epoch=3))
+        assert node.tasks[1].round_id == 8       # fresh task, not deduped
+
+
+# ---------------------------------------------------------------------------
+# master crash + recovery (integration)
+# ---------------------------------------------------------------------------
+
+def _proc_transport(**kw):
+    kw.setdefault("hb_interval", 0.05)
+    kw.setdefault("hb_miss", 4)
+    kw.setdefault("dead_after", 2)
+    kw.setdefault("connect_timeout", 60.0)
+    # the children's reconnect schedule is fixed at spawn: it must span
+    # the crash -> recover() gap or the pool can never be adopted
+    kw.setdefault("reconnect_backoff", 0.05)
+    kw.setdefault("reconnect_tries", 10)
+    return SocketTransport(**kw)
+
+
+class TestMasterRecovery:
+    def test_crash_recover_zero_recompute_bit_identical(self, tmp_path):
+        n = k = 3
+        chunks = 2
+        rng = np.random.default_rng(SEED + 11)
+        a = rng.standard_normal((48, 24))
+        x = rng.standard_normal(24)
+        # k == n: every chunk needs every worker, so the coverage SET (and
+        # with it the decode) is identical across runs — bit-identity is
+        # checkable.  Worker 0 is ~12x slower and holds the round open.
+        speeds = np.array([[0.08, 1.0, 1.0]])
+        strat = GeneralS2C2(n, k, a.shape[0], chunks=chunks)
+        cfg = ClusterConfig(n_workers=n, k=k, row_cost=5e-3,
+                            starvation_timeout=20.0,
+                            journal_dir=str(tmp_path))
+        tr1 = Tracer(enabled=True)
+        eng = CodedExecutionEngine(cfg, TraceInjector(speeds), tracer=tr1,
+                                   transport=_proc_transport())
+        eng2 = None
+        try:
+            data = eng.load_matrix(a, chunks=chunks)
+            h1 = eng.matvec_async(data, x, strat)
+            # crash once both fast workers' acks are journaled (meta +
+            # install + plan = 3 records precede the acks)
+            assert _wait(lambda: eng.registry.value(
+                "s2c2_journal_records_total") >= 3 + 4)
+            procs = eng.transport.procs
+            eng.crash()
+            with pytest.raises(EngineClosed):
+                h1.result(timeout=10.0)
+
+            tr2 = Tracer(enabled=True)
+            eng2 = CodedExecutionEngine.recover(
+                cfg, TraceInjector(speeds), tracer=tr2,
+                transport=_proc_transport(connect_timeout=30.0),
+                procs=procs)
+            assert len(eng2.recovered) == 1
+            (rid, handle), = [(h.round_id, h)
+                              for h in eng2.recovered.values()]
+            out = handle.result(timeout=60.0)
+            np.testing.assert_allclose(out.y, a @ x, rtol=1e-9)
+            assert out.metrics.recovered_chunks >= 4
+
+            # zero recompute: no journaled (worker, chunk) pair was ever
+            # re-enqueued by the recovered engine (asserted from traces)
+            journaled = {(w, c)
+                         for c, entries in eng2.journal_state.acks[rid].items()
+                         for w, _ in entries}
+            assert len(journaled) >= 4
+            re_enqueued = {(r.worker, r.chunk_id) for r in tr2.snapshot()
+                           if r.kind == KIND_ENQUEUE and r.round_id == rid}
+            assert not (re_enqueued & journaled)
+            assert re_enqueued            # the slow worker's chunks did run
+
+            # bit-identical decode vs an uninterrupted run (in-proc pool)
+            ref = CodedExecutionEngine(
+                ClusterConfig(n_workers=n, k=k, row_cost=1e-5), NoSlowdown())
+            try:
+                ref_out = ref.matvec(ref.load_matrix(a, chunks=chunks), x,
+                                     strat)
+            finally:
+                ref.shutdown()
+            assert np.array_equal(out.y, ref_out.y)
+        finally:
+            eng.shutdown()
+            if eng2 is not None:
+                eng2.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# service-tier recovery (integration)
+# ---------------------------------------------------------------------------
+
+class TestServiceRecovery:
+    def test_crashed_job_resubmitted_resolves_via_replay_cache(
+            self, tmp_path):
+        n = k = 3
+        chunks = 2
+        rng = np.random.default_rng(SEED + 23)
+        a = rng.standard_normal((48, 24))
+        x = rng.standard_normal(24)
+        speeds = np.array([[0.08, 1.0, 1.0]])
+        strat = GeneralS2C2(n, k, a.shape[0], chunks=chunks)
+        cfg = ClusterConfig(n_workers=n, k=k, row_cost=5e-3,
+                            starvation_timeout=20.0,
+                            journal_dir=str(tmp_path))
+        eng = CodedExecutionEngine(cfg, TraceInjector(speeds),
+                                   transport=_proc_transport())
+        svc = JobService(eng, max_inflight=2)
+        eng2 = None
+        svc2 = None
+        try:
+            h = svc.submit(MatvecJob(a, [x], strat, chunks=chunks))
+            assert h.journaled
+            assert _wait(lambda: eng.registry.value(
+                "s2c2_journal_records_total") >= 3 + 4)
+            procs = eng.transport.procs
+            eng.crash()
+            # the interrupted handle resolves with a typed EngineClosed —
+            # and its admission stays open for recovery to resubmit
+            assert h.wait(timeout=15.0)
+            assert h.metrics.error and "EngineClosed" in h.metrics.error
+            svc.close()
+
+            eng2 = CodedExecutionEngine.recover(
+                cfg, TraceInjector(speeds),
+                transport=_proc_transport(connect_timeout=30.0),
+                procs=procs)
+            assert len(eng2.recovered) == 1
+            svc2 = JobService.recover(eng2, max_inflight=2)
+            svc2.drain(timeout=60.0)
+            done = list(svc2.completed)
+            assert len(done) == 1 and done[0].error is None
+            # the resubmission attached to the resumed round (cache hit)
+            assert eng2.recovered == {}
+            assert int(svc2._seq) >= 1    # uid floor past journaled admits
+        finally:
+            if svc2 is not None:
+                svc2.close()
+            svc.close()
+            eng.shutdown()
+            if eng2 is not None:
+                eng2.shutdown()
+
+    def test_admitted_never_planned_job_is_resubmitted(self, tmp_path):
+        from repro.cluster.service import _job_spec
+
+        n, k = 3, 2
+        chunks = 2
+        rng = np.random.default_rng(SEED + 31)
+        a = rng.standard_normal((32, 16))
+        x = rng.standard_normal(16)
+        strat = GeneralS2C2(n, k, a.shape[0], chunks=chunks)
+        cfg = ClusterConfig(n_workers=n, k=k, row_cost=1e-4,
+                            starvation_timeout=20.0,
+                            journal_dir=str(tmp_path))
+        eng = CodedExecutionEngine(cfg, NoSlowdown(),
+                                   transport=_proc_transport())
+        eng2 = None
+        svc2 = None
+        try:
+            # an admission the crashed service never got to plan: durable
+            # admit record, no plan, no job_done
+            spec = _job_spec(MatvecJob(a, [x], strat, chunks=chunks))
+            assert spec is not None
+            eng._journal("admit", {"uid": "j5", "job": spec})
+            # plus one that can never be rebuilt — it must be retired
+            eng._journal("admit", {"uid": "j9", "job": {"kind": "alien"}})
+            procs = eng.transport.procs
+            eng.crash()
+
+            eng2 = CodedExecutionEngine.recover(
+                cfg, NoSlowdown(),
+                transport=_proc_transport(connect_timeout=30.0),
+                procs=procs)
+            assert eng2.recovered == {}          # nothing was planned
+            svc2 = JobService.recover(eng2, max_inflight=2)
+            svc2.drain(timeout=60.0)
+            done = list(svc2.completed)
+            assert len(done) == 1 and done[0].error is None
+            assert int(svc2._seq) >= 9           # floored past j9
+            eng2.journal.sync()
+            st = RoundJournal.replay(str(tmp_path))
+            assert "j9" in st.jobs_done          # unrecoverable: retired
+            assert "j5" in st.jobs_done          # resubmitted + resolved
+            assert st.open_jobs == {}
+        finally:
+            if svc2 is not None:
+                svc2.close()
+            eng.shutdown()
+            if eng2 is not None:
+                eng2.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# asymmetric partition -> SUSPECTED -> heal -> credit -> rejoin (integration)
+# ---------------------------------------------------------------------------
+
+class TestPartitionHeal:
+    def test_partition_credit_and_rejoin(self):
+        n = k = 3
+        chunks = 2
+        victim = 1
+        rng = np.random.default_rng(SEED + 47)
+        a = rng.standard_normal((96, 32))
+        xs = [rng.standard_normal(32) for _ in range(6)]
+        strat = GeneralS2C2(n, k, a.shape[0], chunks=chunks)
+        # k == n: no survivor can stand in for the victim, so every round
+        # MUST stay open until the partition heals and the victim's
+        # buffered results replay — the credit path, not recompute
+        chaos = ChaosConfig(seed=SEED, partition_worker=victim,
+                            partition_mode="events",
+                            partition_after_chunks=1,
+                            partition_duration_s=2.0)
+        tr = Tracer(enabled=True)
+        eng = CodedExecutionEngine(
+            ClusterConfig(n_workers=n, k=k, row_cost=8e-3,
+                          starvation_timeout=30.0, max_reassign_waves=0,
+                          enable_stealing=False),
+            NoSlowdown(), tracer=tr,
+            transport=FaultyTransport(chaos, hb_interval=0.05, hb_miss=4,
+                                      dead_after=2, connect_timeout=60.0,
+                                      event_silence_factor=2.0))
+        try:
+            data = eng.load_matrix(a, chunks=chunks)
+            handles = [eng.matvec_async(data, x, strat) for x in xs]
+            outs = [h.result(timeout=60.0) for h in handles]
+            for out, x in zip(outs, xs):
+                np.testing.assert_allclose(out.y, a @ x, rtol=1e-9)
+
+            reg = eng.registry
+            # the one-way partition really cut the events path and drew a
+            # SUSPECTED (rejoin-eligible) verdict — not a permanent fence
+            assert reg.value("s2c2_transport_chaos_total") > 0
+            assert reg.value("s2c2_transport_verdicts_total") >= 1.0
+            assert _wait(lambda: reg.value("s2c2_rejoins_total") >= 1.0,
+                         timeout=10.0)
+            assert "rejoin" in {r.kind for r in tr.snapshot()}
+            # partition-era chunk results were credited on heal, and the
+            # victim's journal-free replay was never recomputed
+            assert sum(o.metrics.partition_credits for o in outs) >= 1
+            assert reg.value("s2c2_partition_credits_total") >= 1.0
+
+            # the un-fenced worker is planned into fresh rounds
+            x7 = rng.standard_normal(32)
+            out7 = eng.matvec(data, x7, strat)
+            np.testing.assert_allclose(out7.y, a @ x7, rtol=1e-9)
+            rid7 = out7.metrics.round_id
+            enq = {r.worker for r in tr.snapshot()
+                   if r.kind == KIND_ENQUEUE and r.round_id == rid7}
+            assert victim in enq
+        finally:
+            eng.shutdown()
