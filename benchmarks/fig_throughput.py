@@ -45,6 +45,14 @@ Four sections:
   ``transport/ab`` records the paired in-process vs multi-process
   makespans and ``transport/chaos`` the chaos arm's completion rate and
   makespan inflation over the clean process pool.
+* ``transport_shm_ab`` — the shared-memory data plane's payoff: a large
+  (~12 MiB) shard tenant + B=16 multi-RHS rounds through (a) the
+  in-process engine, (b) the process pool with shm off (inline pickle),
+  and (c) the process pool with the descriptor plane on.  Every arm must
+  complete bit-correct; ``transport/shm_ab`` records the paired
+  makespans (acceptance: shm <= 1.05× in-process) and the shard-install
+  bytes that crossed the socket (acceptance: >= 90% reduction —
+  descriptors replace the payloads).
 * ``transport_partition`` — a 2s one-way (events-only) partition of one
   worker at k == n: every round must ride out the blackout and complete
   through the credit path (buffered partition-era results replay at heal
@@ -480,6 +488,91 @@ def transport_ab(csv: Csv) -> None:
         "chaos arm must complete 100% (drop + SIGKILL are recoverable)"
 
 
+def _run_shm_arm(transport):
+    """One shm A/B arm: a large-shard tenant + B=16 multi-RHS rounds.
+
+    Returns (measured wall seconds, install tx bytes, completion rate).
+    The shard set (~12 MiB of float64) is what the descriptor plane
+    exists for: with shm on, installs cross the socket as tiny
+    descriptor frames and the bytes counter barely moves.  The install
+    window is the tx delta across ``load_matrix`` (endpoint sends are
+    synchronous); the makespan window starts after a warm round so
+    process spawn / connect / install cost stays out of the per-round
+    comparison, exactly like ``transport_ab``.
+    """
+    n, k, chunks = 4, 3, 6
+    B = 16
+    rng = np.random.default_rng(61)
+    a = rng.standard_normal((3072, 512))
+    xs = [rng.standard_normal((512, B)) for _ in range(4)]
+    eng = CodedExecutionEngine(
+        ClusterConfig(n_workers=n, k=k, row_cost=2e-4,
+                      starvation_timeout=30.0),
+        injector=NoSlowdown(), transport=transport)
+
+    def tx_bytes():
+        try:
+            return eng.registry.value("s2c2_transport_bytes_total",
+                                      direction="tx")
+        except KeyError:                # in-process arm: no socket at all
+            return 0.0
+
+    try:
+        before = tx_bytes()
+        data = eng.load_matrix(a, chunks=chunks)
+        install_tx = tx_bytes() - before
+        strat = GeneralS2C2(n, k, a.shape[0], chunks=chunks)
+        warm = eng.matmul(data, rng.standard_normal((512, B)), strat)
+        assert warm.y.shape == (a.shape[0], B)
+        t0 = time.perf_counter()
+        outs = [eng.matmul(data, x, strat) for x in xs]
+        wall = time.perf_counter() - t0
+        ok = sum(1 for out, x in zip(outs, xs)
+                 if np.allclose(out.y, a @ x, rtol=1e-9))
+        return wall, install_tx, ok / len(xs)
+    finally:
+        eng.shutdown()
+
+
+def transport_shm_ab(csv: Csv) -> None:
+    # paired arms, best-of-2 interleaved triples for the makespan ratio
+    # (host drift moves proc arms more than inproc; pairing within a
+    # triple cancels it) — the byte reduction is deterministic wire
+    # accounting and identical across repeats
+    triples = []
+    for _ in range(2):
+        wall_in, _, rate_in = _run_shm_arm(None)
+        wall_inline, tx_inline, rate_inline = _run_shm_arm(
+            SocketTransport(connect_timeout=60.0, shm=False))
+        wall_shm, tx_shm, rate_shm = _run_shm_arm(
+            SocketTransport(connect_timeout=60.0, shm=True))
+        assert rate_in == 1.0 and rate_inline == 1.0 and rate_shm == 1.0, \
+            "every shm A/B arm must complete bit-correct"
+        triples.append((wall_in, wall_inline, wall_shm, tx_inline, tx_shm))
+    best = min(triples, key=lambda t: t[2] / t[0])
+    wall_in, wall_inline, wall_shm, tx_inline, tx_shm = best
+    ratio_shm = wall_shm / wall_in
+    ratio_inline = wall_inline / wall_in
+    reduction = 1.0 - tx_shm / tx_inline if tx_inline else 0.0
+    csv.add("throughput/transport/shm_ab", 0.0,
+            f"makespan inproc={wall_in:.3f}s inline={wall_inline:.3f}s "
+            f"shm={wall_shm:.3f}s shm_vs_inproc={ratio_shm:.2f}x "
+            f"(acceptance: <= 1.05x) install_tx inline={tx_inline:.0f}B "
+            f"shm={tx_shm:.0f}B reduction={reduction:.1%} "
+            f"(acceptance: >= 90%)")
+    BENCH.record("transport/shm_ab",
+                 makespan_inproc_s=wall_in,
+                 makespan_proc_inline_s=wall_inline,
+                 makespan_proc_shm_s=wall_shm,
+                 shm_vs_inproc=ratio_shm,
+                 inline_vs_inproc=ratio_inline,
+                 install_tx_bytes_inline=tx_inline,
+                 install_tx_bytes_shm=tx_shm,
+                 install_bytes_reduction=reduction)
+    assert reduction >= 0.90, \
+        f"descriptor plane must cut install bytes >= 90%, got {reduction:.1%}"
+
+
 def transport_partition(csv: Csv) -> None:
     """Asymmetric-partition robustness: 2s one-way events blackout.
 
@@ -692,6 +785,7 @@ def main(csv: Csv) -> None:
     gemm_vs_gemv(csv)
     coalesce_ab(csv)
     transport_ab(csv)
+    transport_shm_ab(csv)
     transport_partition(csv)
     transport_recovery(csv)
     trace_overhead(csv)

@@ -58,6 +58,7 @@ JOURNAL_KINDS: Dict[str, str] = {
     "retire": "round fully decoded: rid",
     "admit": "service job admission: uid + full job payload",
     "job_done": "service job resolved (or resubmitted under a new uid)",
+    "checkpoint": "compaction marker: floors surviving pruned history",
 }
 
 JOURNAL_NAME = "journal.jsonl"
@@ -132,6 +133,86 @@ class RoundJournal:
                 pass
             self._fh.close()
 
+    # -- compaction --------------------------------------------------------
+    def compact(self) -> Dict[str, int]:
+        """Prune retired rounds' records behind a checkpoint marker.
+
+        Ack payloads dominate the file (each carries a base64 ``(rows,
+        B)`` block), and a retired round's acks, plan, and retire marker
+        contribute nothing to recovery — :attr:`JournalState.open_rounds`
+        filters them right back out.  Likewise a resolved service job's
+        admit/job_done pair.  Compaction rewrites the journal without
+        them, atomically (tmp + fsync + ``os.replace``), prefixed by a
+        ``checkpoint`` record that preserves the one thing pruning would
+        otherwise lose: the **round-id floor**.  Without it, a recovered
+        master would re-number rounds from below the pruned history and a
+        surviving child's stale ``(round, chunk)`` replay could collide
+        with a fresh round — the floor makes ``replay`` of the compacted
+        log and of the full log resume identically.
+
+        Install records are never pruned: children still hold those
+        shards, and rejoin revalidates against the journaled digests.
+        """
+        with self._io_lock:
+            if self._closed:
+                return {"pruned_records": 0, "bytes_reclaimed": 0}
+            self._fh.flush()
+            os.fsync(self._fh.fileno())
+            self._unsynced = 0
+            with open(self.path, "r", encoding="utf-8") as fh:
+                lines = fh.readlines()
+            records: List[Tuple[str, Dict[str, Any], str]] = []
+            for line in lines:
+                stripped = line.strip()
+                if not stripped:
+                    continue
+                try:
+                    rec = json.loads(stripped)
+                except json.JSONDecodeError:
+                    break               # torn tail: unrecoverable anyway
+                records.append((rec.get("kind"), rec, stripped))
+            retired = {int(r["rid"]) for k, r, _ in records
+                       if k == "retire"}
+            done = {r["uid"] for k, r, _ in records if k == "job_done"}
+            floor = 0
+            for k, rec, _ in records:
+                if k == "plan":
+                    floor = max(floor, int(rec["rid"]))
+                elif k == "checkpoint":
+                    floor = max(floor, int(rec.get("round_floor", 0)))
+            survivors: List[str] = []
+            for k, rec, raw in records:
+                if k in ("plan", "retire", "ack") and \
+                        int(rec["rid"]) in retired:
+                    continue
+                if k in ("admit", "job_done") and rec["uid"] in done:
+                    continue
+                if k == "checkpoint":
+                    continue            # superseded by the new marker
+                survivors.append(raw)
+            ckpt = json.dumps(
+                {"kind": "checkpoint", "round_floor": floor,
+                 "retired_rounds": len(retired), "resolved_jobs": len(done)},
+                separators=(",", ":"))
+            tmp = self.path + ".compact"
+            with open(tmp, "w", encoding="utf-8") as fh:
+                fh.write(ckpt + "\n")
+                for raw in survivors:
+                    fh.write(raw + "\n")
+                fh.flush()
+                os.fsync(fh.fileno())
+            old_bytes = os.path.getsize(self.path)
+            self._fh.close()
+            os.replace(tmp, self.path)
+            self._fh = open(self.path, "a", encoding="utf-8")
+            new_bytes = os.path.getsize(self.path)
+            pruned = len(records) - len(survivors)
+            logger.info("journal compacted: %d record(s) pruned, %d bytes "
+                        "reclaimed (floor %d)", pruned,
+                        max(old_bytes - new_bytes, 0), floor)
+            return {"pruned_records": pruned,
+                    "bytes_reclaimed": max(old_bytes - new_bytes, 0)}
+
     # -- read side ---------------------------------------------------------
     @classmethod
     def replay(cls, journal_dir: str) -> "JournalState":
@@ -176,6 +257,12 @@ class RoundJournal:
                     st.admits[rec["uid"]] = rec
                 elif kind == "job_done":
                     st.jobs_done.add(rec["uid"])
+                elif kind == "checkpoint":
+                    # compaction marker: pruned history's round-id floor
+                    st.checkpoint = rec
+                    st.checkpoint_floor = max(
+                        st.checkpoint_floor,
+                        int(rec.get("round_floor", 0)))
                 else:
                     logger.warning("journal: unknown record kind %r "
                                    "skipped", kind)
@@ -201,6 +288,10 @@ class JournalState:
     admits: Dict[str, Dict[str, Any]] = dataclasses.field(
         default_factory=dict)
     jobs_done: set = dataclasses.field(default_factory=set)
+    #: last compaction marker (None = never compacted) and the round-id
+    #: floor it preserves for the pruned history
+    checkpoint: Optional[Dict[str, Any]] = None
+    checkpoint_floor: int = 0
 
     @property
     def open_rounds(self) -> Dict[int, Dict[str, Any]]:
@@ -216,7 +307,10 @@ class JournalState:
 
     @property
     def round_floor(self) -> int:
-        return max(self.plans, default=0)
+        # the checkpoint floor covers plans compaction pruned: a resumed
+        # master must never re-issue a round id a stale child could still
+        # replay chunk results for
+        return max(max(self.plans, default=0), self.checkpoint_floor)
 
     @property
     def tenant_floor(self) -> int:

@@ -78,6 +78,7 @@ from repro.cluster.journal import (JournalState, RoundJournal, decode_array,
                                    encode_array)
 from repro.cluster.metrics import RoundMetrics
 from repro.cluster.obs import MetricsRegistry, Tracer
+from repro.cluster.shm import SegmentPool, shm_prefix
 from repro.cluster.transport import (InProcTransport, SocketTransport,
                                      Transport)
 from repro.cluster.worker import (ChunkDone, ChunkTask, ComputeFn, Worker,
@@ -158,6 +159,10 @@ class ClusterConfig:
     # <journal_dir>/journal.jsonl so CodedExecutionEngine.recover() can
     # rebuild open rounds after a master crash without recompute
     journal_dir: Optional[str] = None
+    # compact the journal every N retired rounds (0 = never): prunes
+    # retired rounds' ack payloads behind a checkpoint record so replay
+    # time is bounded by rounds in flight, not rounds ever run
+    journal_compact_every: int = 0
 
     def __post_init__(self):
         if self.steal_sizing not in ("half", "speed"):
@@ -314,7 +319,12 @@ class CodedExecutionEngine:
                 "row_cost": cfg.row_cost,
                 "generator_kind": cfg.generator_kind,
                 "port": getattr(self.transport, "bound_port", None),
-                "epoch": getattr(self.transport, "epoch", 1)})
+                "epoch": getattr(self.transport, "epoch", 1),
+                # shared-memory lineage id: recover() sweeps the dead
+                # master's orphan segments under this prefix
+                "shm_uid": getattr(self.transport, "shm_uid", None)})
+        # retire counter driving periodic journal compaction
+        self._retires_since_compact = 0     # guarded_by: _lock
         #: replay cache filled by recover(): (matrix_digest, x_digest,
         #: strategy_key) -> RoundHandle of the resumed round, letting the
         #: service resolve resubmitted work without recompute
@@ -420,6 +430,12 @@ class CodedExecutionEngine:
         self._m_journal_bytes = reg.counter(
             "s2c2_journal_bytes_total",
             "write-ahead journal bytes appended")
+        self._m_journal_compactions = reg.counter(
+            "s2c2_journal_compactions_total",
+            "journal compaction passes completed")
+        self._m_journal_reclaimed = reg.counter(
+            "s2c2_journal_reclaimed_bytes_total",
+            "journal bytes reclaimed by compaction")
 
     def _journal(self, kind: str, payload: Dict[str, Any]) -> None:
         """Append one write-ahead record (no-op without a journal)."""
@@ -722,6 +738,15 @@ class CodedExecutionEngine:
         transport.epoch = int(st.meta.get("epoch", 1)) + 1
         transport.adopt = True
         transport.adopt_procs = procs
+        shm_uid = st.meta.get("shm_uid")
+        if shm_uid and hasattr(transport, "shm_uid"):
+            # keep the lineage id: surviving children name their result
+            # segments under it (the new master must be able to sweep a
+            # victim's prefix), and the dead master's own orphans — it
+            # crashed without unlinking — are reclaimed here, before any
+            # new segment could share the prefix
+            transport.shm_uid = shm_uid
+            SegmentPool.sweep(shm_prefix(shm_uid, "m"))
 
         def seed_endpoint(ep) -> None:
             # digests let the Rejoin handshake revalidate adopted shards
@@ -1454,7 +1479,22 @@ class CodedExecutionEngine:
         self._publish_round(metrics, state.chunks_done)
         if self.journal is not None:
             self._journal("retire", {"rid": rid})
+            self._maybe_compact()
         return RoundOutput(y=y, metrics=metrics)
+
+    def _maybe_compact(self) -> None:
+        """Compact the journal every ``journal_compact_every`` retires."""
+        every = self.cfg.journal_compact_every
+        if not every or self.journal is None:
+            return
+        with self._lock:
+            self._retires_since_compact += 1
+            if self._retires_since_compact < every:
+                return
+            self._retires_since_compact = 0
+        stats = self.journal.compact()
+        self._m_journal_compactions.inc()
+        self._m_journal_reclaimed.inc(stats["bytes_reclaimed"])
 
     # thread: round-driver
     def _reassign_wave(self, state: _RoundState, rid: int, iteration: int,

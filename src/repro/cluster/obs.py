@@ -116,6 +116,9 @@ KIND_REJOIN = "rejoin"
 KIND_PARTITION_CREDIT = "partition_credit"
 KIND_ROUND_RESUME = "round_resume"
 KIND_RECOVERY = "recovery"
+#: shared-memory data-plane instants: a payload moved into (share) or out
+#: of (attach) a /dev/shm segment — name/bytes/generation ride in ``args``
+KIND_SHM = "shm"
 
 SPAN_KINDS = frozenset({KIND_CHUNK, KIND_ROUND_PLAN, KIND_ROUND_DISPATCH,
                         KIND_ROUND_COLLECT, KIND_ROUND_DECODE})

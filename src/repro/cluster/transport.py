@@ -66,6 +66,8 @@ import numpy as np
 from repro.cluster import obs
 from repro.cluster.injectors import TracedInjector
 from repro.cluster.obs import MetricsRegistry, Tracer
+from repro.cluster.shm import (DEFAULT_SHM_THRESHOLD, SHM_AVAILABLE,
+                               SegmentPool, ShmDescriptor, shm_prefix)
 from repro.cluster.worker import (ChunkDone, ChunkTask, Worker, WorkerDone,
                                   WorkerFailed, WorkerRejoined,
                                   numpy_backend, shard_digest)
@@ -73,35 +75,116 @@ from repro.runtime.elastic import FailureDetector
 
 __all__ = ["Transport", "InProcTransport", "SocketTransport",
            "FaultyTransport", "ChaosConfig", "RemoteWorkerEndpoint",
-           "encode_frame", "decode_frame", "shard_digest"]
+           "encode_frame", "encode_frame_parts", "decode_frame",
+           "shard_digest", "ShmDescriptor", "SegmentPool"]
 
 logger = logging.getLogger("repro.cluster.transport")
 
 
 # ---------------------------------------------------------------------------
-# framing: length-prefixed pickle
+# framing: length-prefixed pickle, protocol-5 out-of-band buffers
 # ---------------------------------------------------------------------------
+#
+# Frame layout (everything after the u32 total-length header is "body"):
+#
+#   !I  body length
+#   !I  number of out-of-band buffers
+#   !Q  length of each buffer, repeated
+#   ... raw buffer bytes, concatenated
+#   ... pickle stream (protocol 5, buffers externalized)
+#
+# Large ndarray payloads that ride inline (the shm fallback path) are
+# externalized by ``buffer_callback`` so the sender never concatenates
+# them into the pickle stream (gather-write via ``sendmsg``) and the
+# receiver reconstructs arrays as zero-copy views over the received
+# body — one fewer memcpy per direction on the hot path.
 
 _HDR = struct.Struct("!I")
+_NBUF = struct.Struct("!I")
+_BLEN = struct.Struct("!Q")
+
+
+def encode_frame_parts(obj) -> List[Any]:
+    """Encode one frame as a list of bytes-like parts (gather-write).
+
+    ``parts[0]`` is the header + buffer directory; the remainder are the
+    raw out-of-band buffers (zero-copy memoryviews over the payload
+    arrays) followed by the pickle stream.  ``b"".join(parts)`` is the
+    exact wire image.  Bitwise-faithful for ndarrays: the buffer bytes
+    cross verbatim, so a float64 payload decodes bit-identically (the
+    wire never rounds).
+    """
+    raw: List[pickle.PickleBuffer] = []
+    try:
+        payload = pickle.dumps(obj, protocol=5,
+                               buffer_callback=raw.append)
+        bufs = [b.raw() for b in raw]
+    except BufferError:             # non-contiguous exotic buffer: inline
+        payload = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+        bufs = []
+    directory = bytearray(_NBUF.pack(len(bufs)))
+    total = _NBUF.size + len(payload)
+    for b in bufs:
+        directory += _BLEN.pack(b.nbytes)
+        total += _BLEN.size + b.nbytes
+    parts: List[Any] = [_HDR.pack(total) + bytes(directory)]
+    parts.extend(bufs)
+    parts.append(payload)
+    return parts
 
 
 def encode_frame(obj) -> bytes:
-    """Length-prefixed pickle frame.  Bitwise-faithful for ndarrays:
-    pickle serializes the exact buffer bytes, so a float64 payload decodes
-    bit-identically (the wire never rounds)."""
-    payload = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
-    return _HDR.pack(len(payload)) + payload
+    """Length-prefixed pickle frame (joined wire image)."""
+    return b"".join(encode_frame_parts(obj))
+
+
+def _frame_nbytes(parts: List[Any]) -> int:
+    return sum(len(p) if isinstance(p, (bytes, bytearray)) else p.nbytes
+               for p in parts)
+
+
+def _send_parts(sock: socket.socket, parts: List[Any]) -> None:
+    """Gather-write one frame without concatenating the parts."""
+    if not hasattr(sock, "sendmsg"):        # pragma: no cover - exotic OS
+        sock.sendall(b"".join(parts))
+        return
+    mvs = [memoryview(p).cast("B") for p in parts]
+    while mvs:
+        sent = sock.sendmsg(mvs)
+        while mvs and sent >= len(mvs[0]):
+            sent -= len(mvs[0])
+            mvs.pop(0)
+        if mvs and sent:
+            mvs[0] = mvs[0][sent:]
+
+
+def _decode_body(body: memoryview) -> Any:
+    (nbufs,) = _NBUF.unpack(body[:_NBUF.size])
+    off = _NBUF.size
+    lens = []
+    for _ in range(nbufs):
+        (ln,) = _BLEN.unpack(body[off:off + _BLEN.size])
+        off += _BLEN.size
+        lens.append(ln)
+    bufs = []
+    for ln in lens:
+        bufs.append(body[off:off + ln])
+        off += ln
+    return pickle.loads(body[off:], buffers=bufs)
 
 
 def decode_frame(data: bytes) -> Tuple[Any, int]:
-    """Decode one frame from ``data``; returns (object, bytes consumed)."""
+    """Decode one frame from ``data``; returns (object, bytes consumed).
+
+    Reconstructed ndarrays are read-only zero-copy views over ``data``.
+    """
     if len(data) < _HDR.size:
         raise ValueError("short frame: no length header")
     (n,) = _HDR.unpack(data[:_HDR.size])
     end = _HDR.size + n
     if len(data) < end:
         raise ValueError(f"short frame: need {end} bytes, have {len(data)}")
-    return pickle.loads(data[_HDR.size:end]), end
+    return _decode_body(memoryview(data)[_HDR.size:end]), end
 
 
 def _recv_exact(sock: socket.socket, n: int) -> bytes:
@@ -116,7 +199,7 @@ def _recv_exact(sock: socket.socket, n: int) -> bytes:
 
 def _recv_frame(sock: socket.socket) -> Tuple[Any, int]:
     (n,) = _HDR.unpack(_recv_exact(sock, _HDR.size))
-    return pickle.loads(_recv_exact(sock, n)), n + _HDR.size
+    return _decode_body(memoryview(_recv_exact(sock, n))), n + _HDR.size
 
 
 # ---------------------------------------------------------------------------
@@ -147,6 +230,29 @@ class _InstallShard:
 
 
 @dataclasses.dataclass
+class _InstallShardShm:             # master -> child: shard via descriptor
+    shard_id: str
+    desc: ShmDescriptor             # the rows live in a shared segment;
+    #                                 the child maps it (keeping the mapping
+    #                                 for the shard's lifetime) and replies
+    #                                 _ShmAck so the master can unlink the
+    #                                 name — one resident copy, zero socket
+    #                                 bytes for the rows themselves
+
+
+@dataclasses.dataclass
+class _ShmAck:                      # child -> master: segments mapped
+    names: List[str]                # the owner may release/unlink these
+
+
+@dataclasses.dataclass
+class _ShmRelease:                  # master -> child: round retired —
+    round_id: int                   # recycle result segments tagged with
+    epoch: int = 0                  # it (fenced: a zombie pre-crash master
+    #                                 must not recycle a live round's data)
+
+
+@dataclasses.dataclass
 class _DropShard:
     shard_id: str
 
@@ -158,10 +264,11 @@ class _SubmitTask:
     iteration: int
     shard_id: str
     chunks: List[Tuple[int, int, int]]
-    x: np.ndarray
+    x: Optional[np.ndarray]         # inline RHS block; None when x_desc set
     row_cost: float
     epoch: int = 0                  # stamped by the master; the child
     #                                 rejects epochs older than its own
+    x_desc: Optional[ShmDescriptor] = None  # shared-memory RHS descriptor
 
 
 @dataclasses.dataclass
@@ -221,6 +328,9 @@ class _EventMsg:                    # child -> master: one worker event
     #                                 unacked buffer when it adopts a new
     #                                 epoch, so a restarted master's fresh
     #                                 floor and the replayed stream agree)
+    shm: Optional[ShmDescriptor] = None  # ChunkDone.result rides a shared
+    #                                 segment; the event carries result=None
+    #                                 and the master re-attaches at delivery
 
 
 @dataclasses.dataclass
@@ -280,6 +390,9 @@ WIRE_PROTOCOL: Dict[type, WireSpec] = {
     _Hello: WireSpec("c2m", protected=True),
     _HelloAck: WireSpec("m2c", protected=True),
     _InstallShard: WireSpec("m2c", protected=True),
+    _InstallShardShm: WireSpec("m2c", protected=True),
+    _ShmAck: WireSpec("c2m", protected=True),
+    _ShmRelease: WireSpec("m2c", protected=True, fenced=True),
     _DropShard: WireSpec("m2c", protected=True),
     _SubmitTask: WireSpec("m2c", fenced=True),
     _SubmitAck: WireSpec("c2m", protected=True),
@@ -681,6 +794,9 @@ class RemoteWorkerEndpoint:
         # that crosses an epoch boundary (fresh floor), this set can.
         # Seeded from the journal floor on recovery.
         self._seen_chunks: Set[Tuple[int, int]] = set()  # guarded_by: _lock
+        # round releases the child missed while disconnected; flushed at
+        # the next attach so its pool recycles parked result segments
+        self._pending_shm_releases: Set[int] = set()  # guarded_by: _lock
         self._offset: Optional[float] = None
         # task bookkeeping: engine task object <-> wire task id
         self._task_seq = itertools.count(1)
@@ -782,6 +898,11 @@ class RemoteWorkerEndpoint:
                 t.tracer.emit(obs.KIND_RECONNECT, worker=self.worker_id)
             logger.info("worker %d reconnected (pid %d)",
                         self.worker_id, hello.pid)
+        with self._lock:
+            missed = sorted(self._pending_shm_releases)
+            self._pending_shm_releases.clear()
+        for rid in missed:
+            self._raw_send(_ShmRelease(rid, epoch=t.epoch))
         self.connected_evt.set()
         self._rx_thread = threading.Thread(
             target=self._read_loop, args=(conn,),
@@ -838,10 +959,12 @@ class RemoteWorkerEndpoint:
                 self._handle(msg, recv_t)
 
     # -- inbound handling --------------------------------------------------
-    def _deliver(self, ev) -> None:
+    def _deliver(self, ev, desc: Optional[ShmDescriptor] = None) -> None:
         # called with self._lock held (keeps puts from different
         # chaos-timer threads in seq order and guards the dedup set);
-        # must not take the lock itself
+        # must not take the lock itself.  Lock order here is
+        # ep._lock -> pool._lock (attach); the pool never calls back
+        # into the endpoint, so the pair cannot invert.
         if isinstance(ev, ChunkDone):
             # cross-epoch dedup: per-epoch seqs restart at an epoch bump,
             # so an at-least-once replay straddling the boundary (master
@@ -856,6 +979,20 @@ class RemoteWorkerEndpoint:
                 t = self.transport
                 t._m_stale.labels(transport=t.kind).inc()
                 return
+            if desc is not None:
+                # the result rides a shared segment: map it and hand the
+                # engine a zero-copy read-only view — decode's gather
+                # reads the (rows, B) block straight out of the mapping.
+                # A miss (child died and was swept, or the round retired
+                # and the tag is fenced) drops the event: a live round
+                # re-covers the chunk via §4.3 reassignment, a retired
+                # round never wanted it.
+                pool = self.transport.shm_pool
+                result = None if pool is None else \
+                    pool.attach(desc, tag=ev.round_id)
+                if result is None:
+                    return
+                ev = dataclasses.replace(ev, result=result)
             # s2c2lint: ignore[S2C201] _deliver's contract: caller holds _lock
             self._seen_chunks.add(key)
         off = self.offset
@@ -907,17 +1044,18 @@ class RemoteWorkerEndpoint:
                     dup = (msg.seq <= self._ev_floor
                            or msg.seq in self._ev_buf)
                     if not dup:
-                        self._ev_buf[msg.seq] = msg.event
+                        self._ev_buf[msg.seq] = (msg.event, msg.shm)
                         while self._ev_floor + 1 in self._ev_buf:
                             self._ev_floor += 1
-                            self._deliver(self._ev_buf.pop(self._ev_floor))
+                            ev, desc = self._ev_buf.pop(self._ev_floor)
+                            self._deliver(ev, desc)
                     cum = self._ev_floor
                 self._raw_send(_EventAck(cum))
                 if dup:
                     return          # retransmit/chaos-dup of a seen event
             else:
                 with self._lock:
-                    self._deliver(msg.event)
+                    self._deliver(msg.event, msg.shm)
         elif isinstance(msg, _Heartbeat):
             if msg.epoch and msg.epoch < t.epoch:
                 t._m_stale.labels(transport=t.kind).inc()
@@ -946,6 +1084,11 @@ class RemoteWorkerEndpoint:
         elif isinstance(msg, _SubmitAck):
             with self._task_lock:
                 self._unacked.pop(msg.task_id, None)
+        elif isinstance(msg, _ShmAck):
+            # the child mapped these install segments: unlink the names so
+            # exactly one resident copy (the child's mapping) remains
+            if t.shm_pool is not None:
+                t.shm_pool.release_names(msg.names)
         elif isinstance(msg, _RetractReply):
             with self._rpc_lock:
                 slot = self._rpcs.pop(msg.req_id, None)
@@ -1002,7 +1145,7 @@ class RemoteWorkerEndpoint:
                 # repaired over the wire, so the worker stays fenced
                 unrecoverable.append(sid)
             else:
-                self._raw_send(_InstallShard(sid, rows))
+                self._send_install(sid, rows)
                 reinstalled.append(sid)
         if unrecoverable:
             logger.warning(
@@ -1055,18 +1198,19 @@ class RemoteWorkerEndpoint:
             conn = self._conn
         if conn is None:
             return False
-        frame = encode_frame(msg)
+        parts = encode_frame_parts(msg)
+        nbytes = _frame_nbytes(parts)
         try:
             with self._tx_lock:
                 # s2c2lint: ignore[S2C203] _tx_lock exists only to keep
                 # concurrent frame writes from interleaving on the wire;
                 # nothing else ever waits on it
-                conn.sendall(frame)
+                _send_parts(conn, parts)
         except OSError:
             return False
         t = self.transport
         t._m_msgs_tx.inc()
-        t._m_bytes_tx.inc(len(frame))
+        t._m_bytes_tx.inc(nbytes)
         return True
 
     def _send(self, msg) -> None:
@@ -1077,12 +1221,30 @@ class RemoteWorkerEndpoint:
         else:
             self._raw_send(msg)
 
+    def _send_install(self, shard_id: str, rows: np.ndarray) -> None:
+        """Install over the data plane when possible, the socket otherwise.
+
+        Install segments are ``recycle=False``: the child keeps its
+        mapping for the shard's lifetime, so the name is unlinked on the
+        child's ``_ShmAck`` (one resident copy) and must never be reused.
+        """
+        t = self.transport
+        desc = None
+        if t.shm_pool is not None:
+            desc = t.shm_pool.share(
+                rows, tag=("install", self.worker_id, shard_id),
+                recycle=False)
+        if desc is not None:
+            self._raw_send(_InstallShardShm(shard_id, desc))
+        else:
+            self._raw_send(_InstallShard(shard_id, rows))
+
     # -- worker-shaped surface (what the engine calls) ---------------------
     def install_shard(self, shard_id: str, rows: np.ndarray) -> None:
         rows = np.ascontiguousarray(rows, dtype=np.float64)
         self.shards[shard_id] = rows
         self.shard_digests[shard_id] = shard_digest(rows)
-        self._raw_send(_InstallShard(shard_id, rows))
+        self._send_install(shard_id, rows)
 
     def drop_shard(self, shard_id: str) -> None:
         self.shards.pop(shard_id, None)
@@ -1091,10 +1253,16 @@ class RemoteWorkerEndpoint:
 
     def submit(self, task: ChunkTask) -> None:
         tid = next(self._task_seq)
+        t = self.transport
+        x = np.asarray(task.x)
+        # one shared segment per round carries the RHS block to every
+        # worker (the round snapshot is immutable); descriptor or inline,
+        # never both
+        desc = t._share_x(task.round_id, x)
         msg = _SubmitTask(tid, task.round_id, task.iteration,
                           task.shard_id, list(task.chunks),
-                          np.asarray(task.x), task.row_cost,
-                          epoch=self.transport.epoch)
+                          None if desc is not None else x,
+                          task.row_cost, epoch=t.epoch, x_desc=desc)
         with self._task_lock:
             self._task_meta[tid] = (task.round_id, task)
             self._task_ids[id(task)] = tid
@@ -1197,6 +1365,15 @@ class RemoteWorkerEndpoint:
                 self._unacked.pop(tid, None)
         with self._lock:
             self._hb_backlog_by_round.pop(round_id, None)
+        t = self.transport
+        if t.shm_pool is not None:
+            # tell the child its result segments for this round may be
+            # recycled; if the child is offline, queue the release and
+            # flush it at the next attach (its pool keeps the segments
+            # parked until then — bounded by rounds in flight)
+            if not self._raw_send(_ShmRelease(round_id, epoch=t.epoch)):
+                with self._lock:
+                    self._pending_shm_releases.add(round_id)
 
 
 # ---------------------------------------------------------------------------
@@ -1225,7 +1402,10 @@ class SocketTransport:
                  chaos: Optional[ChaosConfig] = None,
                  epoch: int = 1, allow_rejoin: bool = True,
                  adopt: bool = False,
-                 event_silence_factor: float = 8.0):
+                 event_silence_factor: float = 8.0,
+                 shm: bool = True,
+                 shm_threshold: int = DEFAULT_SHM_THRESHOLD,
+                 shm_uid: Optional[str] = None):
         self.host = host
         self.port = port
         self.hb_interval = hb_interval
@@ -1268,6 +1448,20 @@ class SocketTransport:
         #: work for this long while zero events arrive is SUSPECTED —
         #: generous enough that a straggler's long chunk doesn't trip it
         self.event_silence_factor = event_silence_factor
+        #: shared-memory data plane: bulk ndarray payloads (installs, RHS
+        #: blocks, results) ride /dev/shm segments and the socket carries
+        #: only descriptors.  ``shm=False`` (or an unsupported platform,
+        #: or a payload under shm_threshold) falls back to inline pickle.
+        self.shm = shm and SHM_AVAILABLE
+        self.shm_threshold = shm_threshold
+        #: engine-lineage id naming every segment (``s2c2shm_<uid>...``);
+        #: journaled by the engine so ``recover()`` can sweep a dead
+        #: master's orphans and a verdict can sweep its victim's
+        self.shm_uid = shm_uid if shm_uid is not None \
+            else os.urandom(3).hex()
+        self.shm_pool: Optional[SegmentPool] = None
+        self._x_descs: Dict[int, Optional[ShmDescriptor]] = {}  # guarded_by: _x_lock
+        self._x_lock = threading.Lock()
         self.n_workers = 0
         self.events: Optional["queue.Queue"] = None
         self.tracer: Optional[Tracer] = None
@@ -1323,6 +1517,10 @@ class SocketTransport:
         self.events = events
         self.tracer = tracer
         self._declare_metrics(registry)
+        self.shm_pool = SegmentPool(self.shm_uid, "m",
+                                    threshold=self.shm_threshold,
+                                    enabled=self.shm, registry=registry,
+                                    tracer=tracer, kind=self.kind)
         if self.chaos_cfg is not None:
             self.chaos = _Chaos(self.chaos_cfg, self)
 
@@ -1369,7 +1567,9 @@ class SocketTransport:
                     target=_worker_main,
                     args=(w, addr[0], addr[1], base_injector, spec,
                           self.hb_interval, self.reconnect_backoff,
-                          self.reconnect_tries),
+                          self.reconnect_tries,
+                          self.shm_uid if self.shm else None,
+                          self.shm_threshold),
                     name=f"s2c2-worker-{w}", daemon=True)
                 p.start()
                 self.endpoints[w].proc = p
@@ -1530,6 +1730,14 @@ class SocketTransport:
                 except (OSError, ValueError):
                     pass
             ep._force_close()
+            if self.shm_pool is not None:
+                # reclaim the data plane: unlink our pending installs for
+                # the victim and sweep the dead child's own segments (its
+                # SIGKILLed pool never got to clean up).  Unlink never
+                # invalidates mappings, so results already attached to
+                # open rounds keep decoding.
+                self.shm_pool.release_prefix(("install", w))
+                SegmentPool.sweep(shm_prefix(self.shm_uid, f"w{w}_"))
         # synthetic crash event: the collector broadcasts WorkerFailed to
         # every live round, which fail over via _failover_dispatch — the
         # round completes on the survivors instead of waiting out §4.3
@@ -1554,10 +1762,35 @@ class SocketTransport:
             except (OSError, ValueError):
                 pass
 
+    # -- shared-memory data plane -----------------------------------------
+    def _share_x(self, round_id: int,
+                 x: np.ndarray) -> Optional[ShmDescriptor]:
+        """Share one round's RHS block once; every submit reuses it."""
+        pool = self.shm_pool
+        if pool is None:
+            return None
+        with self._x_lock:
+            if round_id in self._x_descs:
+                return self._x_descs[round_id]
+        desc = pool.share(np.ascontiguousarray(x), tag=("x", round_id))
+        with self._x_lock:
+            # keep-first on a submit race: the loser's segment stays
+            # owned under the same tag and is reclaimed at round retire
+            return self._x_descs.setdefault(round_id, desc)
+
     # -- engine hooks ------------------------------------------------------
     def round_retired(self, round_id: int) -> None:
         for ep in self.endpoints:
             ep.round_retired(round_id)
+        pool = self.shm_pool
+        if pool is not None:
+            # decode is done: recycle the round's x segment (owned) and
+            # unmap its result attachments; the retired-tag fence makes a
+            # straggler share/attach for this round refuse, not leak
+            pool.retire_tag(round_id)
+            pool.retire_tag(("x", round_id))
+            with self._x_lock:
+                self._x_descs.pop(round_id, None)
 
     def _close_lsock(self) -> None:
         """Really stop listening: shutdown() before close().
@@ -1607,6 +1840,11 @@ class SocketTransport:
                     pass
         if self._monitor is not None:
             self._monitor.join(timeout=2.0)
+        if self.shm_pool is not None:
+            # a genuinely dead master cannot unlink: close our mappings
+            # but leave the names in place — recover() sweeps the "m"
+            # prefix, and the surviving children keep their segments
+            self.shm_pool.close(unlink=False)
         # deliberately orphan the children: self.procs keeps the handles
         # so a recovery transport (or test teardown) can adopt/kill them
 
@@ -1645,6 +1883,12 @@ class SocketTransport:
                     pass
         if self._monitor is not None:
             self._monitor.join(timeout=2.0)
+        if self.shm_pool is not None:
+            # every child has exited (joined or killed above): release our
+            # segments, then sweep the whole lineage so SIGKILLed
+            # children's orphans go too — zero residue under the uid
+            self.shm_pool.close(unlink=True)
+            SegmentPool.sweep(shm_prefix(self.shm_uid))
 
 
 class FaultyTransport(SocketTransport):
@@ -1700,9 +1944,17 @@ class _ChildNode:
 
     def __init__(self, worker_id: int, host: str, port: int, injector,
                  compute_spec, hb_interval: float,
-                 reconnect_backoff: float, reconnect_tries: int):
+                 reconnect_backoff: float, reconnect_tries: int,
+                 shm_uid: Optional[str] = None,
+                 shm_threshold: int = DEFAULT_SHM_THRESHOLD):
         self.worker_id = worker_id
         self.addr = (host, port)
+        # child half of the data plane: owns result segments (tagged by
+        # round, recycled on the master's _ShmRelease), maps install/RHS
+        # segments the master shares.  shm_uid None = inline-only mode.
+        self.shm_pool = SegmentPool(shm_uid or "off", f"w{worker_id}",
+                                    threshold=shm_threshold,
+                                    enabled=shm_uid is not None)
         self.hb_interval = hb_interval
         self.reconnect_backoff = reconnect_backoff
         self.reconnect_tries = reconnect_tries
@@ -1740,7 +1992,7 @@ class _ChildNode:
                 # s2c2lint: ignore[S2C203] _tx_lock only serializes frame
                 # writes from the pumps and the control loop; no other
                 # work ever runs under it
-                sock.sendall(encode_frame(msg))
+                _send_parts(sock, encode_frame_parts(msg))
             return True
         except OSError:
             return False
@@ -1821,26 +2073,38 @@ class _ChildNode:
             ev = self.events.get()
             if self._stopping:
                 return
+            desc = None
+            if isinstance(ev, ChunkDone) and ev.result is not None:
+                # move the (rows, B) result into a pooled segment and
+                # strip it from the event — the descriptor rides the
+                # _EventMsg, and retransmits reuse the same segment.
+                # share() returning None (small / disabled / round
+                # already released) keeps the result inline.
+                desc = self.shm_pool.share(
+                    np.ascontiguousarray(ev.result), tag=ev.round_id)
+                if desc is not None:
+                    ev = dataclasses.replace(ev, result=None)
             with self._ev_lock:
                 self._ev_seq += 1
                 seq = self._ev_seq
                 epoch = self.epoch
-                self._ev_unacked.append([seq, ev, time.perf_counter()])
+                self._ev_unacked.append([seq, ev, time.perf_counter(),
+                                         desc])
             # best-effort first send; loss (chaos, disconnect window) is
             # repaired by the retransmit sweep until the master's ack lands
-            self._send(_EventMsg(ev, seq, epoch=epoch))
+            self._send(_EventMsg(ev, seq, epoch=epoch, shm=desc))
 
     def _retransmit_events(self, now: float) -> None:
         timeout = max(4 * self.hb_interval, 0.2)
-        due: List[Tuple[int, Any]] = []
+        due: List[Tuple[int, Any, Optional[ShmDescriptor]]] = []
         with self._ev_lock:
             epoch = self.epoch
             for rec in self._ev_unacked:
                 if now - rec[2] >= timeout:
                     rec[2] = now
-                    due.append((rec[0], rec[1]))
-        for seq, ev in due:
-            self._send(_EventMsg(ev, seq, epoch=epoch))
+                    due.append((rec[0], rec[1], rec[3]))
+        for seq, ev, desc in due:
+            self._send(_EventMsg(ev, seq, epoch=epoch, shm=desc))
 
     def _heartbeat_pump(self) -> None:
         seq = 0
@@ -1890,10 +2154,24 @@ class _ChildNode:
             with self._tasks_lock:
                 if msg.task_id in self.tasks:
                     return
-            x = np.asarray(msg.x)
-            # round snapshots are immutable on the master; restore the
-            # flag so shard-aware backends may identity-key device copies
-            x.setflags(write=False)
+            if msg.x_desc is not None:
+                # zero-copy RHS: map the master's shared segment (cached
+                # per round).  A miss means the round already retired
+                # master-side and its segment was reclaimed — drop the
+                # task; nobody wants its results.
+                x = self.shm_pool.attach(msg.x_desc, tag=msg.round_id)
+                if x is None:
+                    logger.warning(
+                        "worker %d: RHS segment %s gone (round %d "
+                        "retired?) — dropping task %d", self.worker_id,
+                        msg.x_desc.name, msg.round_id, msg.task_id)
+                    return
+            else:
+                x = np.asarray(msg.x)
+                # round snapshots are immutable on the master; restore the
+                # flag so shard-aware backends may identity-key device
+                # copies
+                x.setflags(write=False)
             task = ChunkTask(round_id=msg.round_id,
                              iteration=msg.iteration,
                              shard_id=msg.shard_id,
@@ -1936,8 +2214,39 @@ class _ChildNode:
             w.promote_round(msg.round_id)
         elif isinstance(msg, _InstallShard):
             w.install_shard(msg.shard_id, msg.rows)
+        elif isinstance(msg, _InstallShardShm):
+            # map the master's install segment and keep the mapping for
+            # the shard's lifetime (the worker stores the view directly —
+            # ascontiguousarray is a no-op on a contiguous float64 view).
+            # The ack lets the master unlink the name: from here on the
+            # only resident copy is this mapping.
+            view = self.shm_pool.attach(msg.desc,
+                                        tag=("shard", msg.shard_id))
+            if view is not None:
+                w.install_shard(msg.shard_id, view)
+                self._send(_ShmAck([msg.desc.name]))
+            else:
+                # no ack: the master keeps the segment; a rejoin's digest
+                # mismatch reinstalls (shm or inline) if it matters
+                logger.warning("worker %d: install segment %s not "
+                               "mappable; shard %s NOT installed",
+                               self.worker_id, msg.desc.name, msg.shard_id)
+        elif isinstance(msg, _ShmRelease):
+            with self._ev_lock:
+                epoch = self.epoch
+            if msg.epoch and msg.epoch < epoch:
+                logger.warning("worker %d: dropping stale-epoch shm "
+                               "release (epoch %d < %d)", self.worker_id,
+                               msg.epoch, epoch)
+                return
+            # round retired: recycle our result segments for it and unmap
+            # its RHS attachment; the retired-tag fence makes a straggler
+            # result for this round fall back to inline (harmless — the
+            # master drops retired-round events anyway)
+            self.shm_pool.retire_tag(msg.round_id)
         elif isinstance(msg, _DropShard):
             w.drop_shard(msg.shard_id)
+            self.shm_pool.detach_tag(("shard", msg.shard_id))
         elif isinstance(msg, _Stop):
             # flush the trace tail first: the master's reader drains this
             # frame before EOF, so a post-shutdown dump_trace still shows
@@ -1975,19 +2284,23 @@ class _ChildNode:
                 pass
             if self._stopping:
                 self.worker.abort()
+                self.shm_pool.close()
                 return 0
             # reconnect with exponential backoff; exhaustion = give up
             # (the master's grace window expires and verdicts us)
             if not self._connect(first=False):
+                self.shm_pool.close()
                 return 1
 
 
 def _worker_main(worker_id: int, host: str, port: int, injector,
                  compute_spec, hb_interval: float, reconnect_backoff: float,
-                 reconnect_tries: int) -> None:
+                 reconnect_tries: int, shm_uid: Optional[str] = None,
+                 shm_threshold: int = DEFAULT_SHM_THRESHOLD) -> None:
     """Child-process entry point (spawn target)."""
     node = _ChildNode(worker_id, host, port, injector, compute_spec,
-                      hb_interval, reconnect_backoff, reconnect_tries)
+                      hb_interval, reconnect_backoff, reconnect_tries,
+                      shm_uid, shm_threshold)
     code = node.run()
     # immediate exit: daemon threads (pumps, worker) must not block
     # interpreter teardown, and a fail-stopped worker has nothing to flush

@@ -1,0 +1,567 @@
+"""Zero-copy shared-memory data plane (PR 10 tentpole).
+
+Four layers:
+
+* unit — the :class:`SegmentPool` lifecycle (bit-identical share/attach,
+  threshold fallback, recycle generations, the retired-tag fence,
+  unlink-on-ack release, close/sweep accounting);
+* unit — the protocol-5 frame codec ships ndarray buffers out-of-band
+  and stays bitwise-faithful (float64 payloads, truncation rejection);
+* integration — a proc-pool run over shm decodes bit-identical to the
+  inline-pickle run and to the in-proc reference, while shard installs
+  stop crossing the socket;
+* integration — segment lifecycle under chaos: worker SIGKILL, forced
+  connection drop, one-way partition -> rejoin, and master crash ->
+  ``recover()`` each finish correctly AND leave zero segments behind
+  (pool accounting + a literal ``/dev/shm`` scan of the lineage prefix).
+
+Journal compaction (satellite) rides along: replay of a compacted log
+must resume identically to replay of the full log, and the engine's
+``journal_compact_every`` hook bounds the file by rounds in flight.
+
+The CI ``chaos`` matrix runs this file across seeds via ``CHAOS_SEED``.
+"""
+
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.cluster import (ChaosConfig, ClusterConfig, CodedExecutionEngine,
+                           EngineClosed, FaultyTransport, NoSlowdown,
+                           SocketTransport, TraceInjector, Tracer)
+from repro.cluster.journal import RoundJournal, encode_array
+from repro.cluster.obs import KIND_SHM, MetricsRegistry
+from repro.cluster.shm import (SHM_AVAILABLE, SegmentPool, ShmDescriptor,
+                               shm_prefix)
+from repro.cluster.transport import decode_frame, encode_frame
+from repro.core.strategies import GeneralS2C2
+
+SEED = int(os.environ.get("CHAOS_SEED", "0"))
+RNG = np.random.default_rng(SEED + 70)
+
+pytestmark = pytest.mark.skipif(
+    not SHM_AVAILABLE, reason="multiprocessing.shared_memory unavailable")
+
+
+def _wait(pred, timeout=15.0, interval=0.02):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return True
+        time.sleep(interval)
+    return pred()
+
+
+def _assert_no_leak(uid: str):
+    """The whole lineage must be gone from /dev/shm after shutdown."""
+    leftovers = SegmentPool.scan(shm_prefix(uid))
+    assert leftovers == [], f"leaked shm segments: {leftovers}"
+
+
+# ---------------------------------------------------------------------------
+# SegmentPool unit tests
+# ---------------------------------------------------------------------------
+
+class TestSegmentPool:
+    def _pool(self, side="m", **kw):
+        kw.setdefault("threshold", 1)
+        return SegmentPool("test" + os.urandom(2).hex(), side, **kw)
+
+    def test_share_attach_bit_identical(self):
+        pool = self._pool()
+        try:
+            arr = RNG.standard_normal((37, 5))
+            arr[3, 1] = np.nan              # bitwise, not just allclose
+            desc = pool.share(arr, tag=1)
+            assert desc is not None and desc.shape == (37, 5)
+            view = pool.attach(desc, tag=1)
+            assert view is not None
+            assert not view.flags.writeable
+            assert view.tobytes() == arr.tobytes()
+            del view                    # a held view would park the mapping
+            #                             on the zombie list at close
+        finally:
+            assert pool.close()["leaked"] == 0
+            _assert_no_leak(pool.uid)
+
+    def test_threshold_and_disabled_fall_back(self):
+        reg = MetricsRegistry()
+        pool = self._pool(threshold=10**6, registry=reg)
+        off = SegmentPool("off" + os.urandom(2).hex(), "m", enabled=False,
+                          registry=reg)
+        try:
+            assert pool.share(np.zeros(8), tag=1) is None       # small
+            assert off.share(np.zeros(10**6), tag=1) is None    # disabled
+            assert reg.value("s2c2_shm_fallbacks_total", transport="proc",
+                             reason="small") == 1.0
+            assert reg.value("s2c2_shm_fallbacks_total", transport="proc",
+                             reason="disabled") == 1.0
+        finally:
+            pool.close()
+            off.close()
+
+    def test_retire_recycles_with_generation_bump(self):
+        pool = self._pool()
+        try:
+            d1 = pool.share(np.full(64, 1.0), tag=1)
+            pool.retire_tag(1)
+            assert pool.stats()["free"] == 1
+            d2 = pool.share(np.full(32, 2.0), tag=2)
+            # same segment, new generation: an ABA read through a stale d1
+            # is detectable by generation (and harmless by round routing)
+            assert d2.name == d1.name and d2.generation == d1.generation + 1
+            view = pool.attach(d2, tag=2)
+            assert view is not None and float(view[0]) == 2.0
+            del view
+        finally:
+            assert pool.close()["leaked"] == 0
+            _assert_no_leak(pool.uid)
+
+    def test_retired_tag_refuses_share_and_attach(self):
+        pool = self._pool()
+        try:
+            desc = pool.share(np.zeros(64), tag=5)
+            pool.retire_tag(5)
+            # a straggler racing the release degrades to inline, not a leak
+            assert pool.share(np.zeros(64), tag=5) is None
+            assert pool.attach(desc, tag=5) is None
+        finally:
+            assert pool.close()["leaked"] == 0
+            _assert_no_leak(pool.uid)
+
+    def test_release_names_unlinks_non_recycled(self):
+        # the install unlink-on-ack path: recycle=False segments are
+        # disposed outright, never returned to the free list
+        pool = self._pool()
+        try:
+            desc = pool.share(np.zeros(64), tag=("install", 0, "t1"),
+                              recycle=False)
+            assert desc.name in SegmentPool.scan(shm_prefix(pool.uid))
+            pool.release_names([desc.name])
+            st = pool.stats()
+            assert st["owned"] == 0 and st["free"] == 0
+            assert SegmentPool.scan(shm_prefix(pool.uid)) == []
+        finally:
+            pool.close()
+
+    def test_release_prefix_sweeps_one_workers_installs(self):
+        pool = self._pool()
+        try:
+            keep = pool.share(np.zeros(64), tag=("install", 2, "t1"),
+                              recycle=False)
+            drop = pool.share(np.zeros(64), tag=("install", 1, "t1"),
+                              recycle=False)
+            pool.release_prefix(("install", 1))
+            names = SegmentPool.scan(shm_prefix(pool.uid))
+            assert keep.name in names and drop.name not in names
+        finally:
+            assert pool.close()["leaked"] == 0
+            _assert_no_leak(pool.uid)
+
+    def test_close_then_sweep_reclaims_everything(self):
+        pool = self._pool()
+        pool.share(np.zeros(512), tag=1)
+        pool.share(np.zeros(512), tag=2, recycle=False)
+        # unlink=False models a crashed master: names survive close...
+        pool.close(unlink=False)
+        assert len(SegmentPool.scan(shm_prefix(pool.uid))) == 2
+        # ...and recover()'s orphan sweep reclaims them by prefix
+        assert SegmentPool.sweep(shm_prefix(pool.uid)) == 2
+        _assert_no_leak(pool.uid)
+        pool.close()                    # idempotent
+
+    def test_attach_missing_segment_returns_none(self):
+        pool = self._pool()
+        try:
+            ghost = ShmDescriptor(name="s2c2shm_nope_1", dtype="float64",
+                                  shape=(4,), nbytes=32)
+            assert pool.attach(ghost, tag=9) is None
+        finally:
+            pool.close()
+
+    def test_tracer_annotations(self):
+        # a self-attach (owner mapping reused) is not a data-plane event:
+        # only a real peer attach emits, so use two pools
+        tr = Tracer(enabled=True)
+        owner = self._pool(tracer=tr)
+        peer = SegmentPool(owner.uid, "w1", threshold=1, tracer=tr)
+        try:
+            desc = owner.share(np.zeros(64), tag=1)
+            assert peer.attach(desc, tag=1) is not None
+            acts = {dict(r.args).get("action") for r in tr.snapshot()
+                    if r.kind == KIND_SHM}
+            assert acts == {"share", "attach"}
+        finally:
+            peer.close()
+            owner.close()
+            _assert_no_leak(owner.uid)
+
+
+# ---------------------------------------------------------------------------
+# protocol-5 out-of-band codec
+# ---------------------------------------------------------------------------
+
+class TestCodecOutOfBand:
+    def test_large_array_roundtrip_is_bitwise(self):
+        # big enough that pickle protocol 5 exports the buffer out-of-band
+        payload = {"x": RNG.standard_normal((257, 31)), "rid": 9}
+        frame = encode_frame(payload)
+        obj, consumed = decode_frame(frame)
+        assert consumed == len(frame)
+        assert obj["rid"] == 9
+        assert obj["x"].tobytes() == payload["x"].tobytes()
+
+    def test_noncontiguous_and_scalar_payloads(self):
+        arr = RNG.standard_normal((64, 64))[::2, ::3]   # strided view
+        obj, _ = decode_frame(encode_frame({"a": arr, "s": 1.5}))
+        assert np.array_equal(obj["a"], arr) and obj["s"] == 1.5
+
+    def test_truncated_oob_frame_rejected(self):
+        frame = encode_frame(np.zeros(4096))
+        with pytest.raises(ValueError):
+            decode_frame(frame[:2])
+        with pytest.raises(ValueError):
+            decode_frame(frame[:-1])
+
+
+# ---------------------------------------------------------------------------
+# proc-pool integration: shm vs inline bit-identity + byte accounting
+# ---------------------------------------------------------------------------
+
+def _proc_transport(**kw):
+    kw.setdefault("hb_interval", 0.05)
+    kw.setdefault("hb_miss", 4)
+    kw.setdefault("dead_after", 2)
+    kw.setdefault("connect_timeout", 60.0)
+    kw.setdefault("reconnect_backoff", 0.05)
+    kw.setdefault("reconnect_tries", 10)
+    return SocketTransport(**kw)
+
+
+def _run_rounds(eng, a, xs, strat, chunks):
+    data = eng.load_matrix(a, chunks=chunks)
+    return [eng.matvec(data, x, strat).y for x in xs]
+
+
+class TestShmTransport:
+    def test_shm_decode_bit_identical_to_inline(self):
+        # k == n: the coverage set (hence the decode) is deterministic, so
+        # the shm and inline data planes must agree to the bit
+        n = k = 3
+        chunks = 3
+        a = RNG.standard_normal((96, 48))
+        xs = [RNG.standard_normal(48) for _ in range(2)]
+        strat = GeneralS2C2(n, k, a.shape[0], chunks=chunks)
+        cfg = ClusterConfig(n_workers=n, k=k, row_cost=1e-4,
+                            starvation_timeout=30.0)
+
+        t_shm = _proc_transport(shm=True, shm_threshold=1024)
+        uid = t_shm.shm_uid
+        eng = CodedExecutionEngine(cfg, NoSlowdown(), transport=t_shm)
+        try:
+            ys_shm = _run_rounds(eng, a, xs, strat, chunks)
+            reg = eng.registry
+            assert reg.value("s2c2_shm_segments_total", transport="proc") > 0
+            assert reg.value("s2c2_shm_bytes_total", transport="proc") > 0
+        finally:
+            eng.shutdown()
+        _assert_no_leak(uid)
+
+        eng2 = CodedExecutionEngine(cfg, NoSlowdown(),
+                                    transport=_proc_transport(shm=False))
+        try:
+            ys_inline = _run_rounds(eng2, a, xs, strat, chunks)
+        finally:
+            eng2.shutdown()
+
+        ref = CodedExecutionEngine(
+            ClusterConfig(n_workers=n, k=k, row_cost=1e-5), NoSlowdown())
+        try:
+            ys_ref = _run_rounds(ref, a, xs, strat, chunks)
+        finally:
+            ref.shutdown()
+
+        for y_s, y_i, y_r, x in zip(ys_shm, ys_inline, ys_ref, xs):
+            np.testing.assert_allclose(y_s, a @ x, rtol=1e-9)
+            assert np.array_equal(y_s, y_i)
+            assert np.array_equal(y_s, y_r)
+
+    def test_shm_cuts_install_bytes_over_socket(self):
+        # the install payload dominates socket tx for a large matrix; with
+        # the descriptor plane it must shrink by >= 90% (acceptance bar)
+        n, k, chunks = 3, 2, 4
+        a = RNG.standard_normal((1024, 256))            # ~2 MiB float64
+        x = RNG.standard_normal(256)
+        strat = GeneralS2C2(n, k, a.shape[0], chunks=chunks)
+        cfg = ClusterConfig(n_workers=n, k=k, row_cost=1e-5,
+                            starvation_timeout=30.0)
+
+        tx_bytes = {}
+        for label, kw in (("inline", dict(shm=False)),
+                          ("shm", dict(shm=True, shm_threshold=64 * 1024))):
+            eng = CodedExecutionEngine(cfg, NoSlowdown(),
+                                       transport=_proc_transport(**kw))
+            uid = eng.transport.shm_uid
+            try:
+                data = eng.load_matrix(a, chunks=chunks)
+                before = eng.registry.value("s2c2_transport_bytes_total",
+                                            direction="tx")
+                # installs flow at load_matrix: measure the whole session
+                out = eng.matvec(data, x, strat)
+                np.testing.assert_allclose(out.y, a @ x, rtol=1e-9)
+                assert before >= 0.0
+                tx_bytes[label] = eng.registry.value(
+                    "s2c2_transport_bytes_total", direction="tx")
+            finally:
+                eng.shutdown()
+            _assert_no_leak(uid)
+        assert tx_bytes["shm"] <= 0.10 * tx_bytes["inline"], tx_bytes
+
+
+# ---------------------------------------------------------------------------
+# segment lifecycle under chaos: every failure mode reclaims to zero
+# ---------------------------------------------------------------------------
+
+class TestShmChaosLifecycle:
+    def test_sigkill_mid_round_leaves_no_segments(self):
+        # chaos SIGKILLs worker 2's process mid-round: the dead child can
+        # never release its result segments, so the master's permanent
+        # verdict must sweep the victim's w2_ prefix
+        n, k, chunks = 3, 2, 6
+        a = RNG.standard_normal((240, 80))
+        x = RNG.standard_normal(80)
+        speeds = np.ones((1, n))
+        speeds[0, n - 1] = 0.2
+        chaos = ChaosConfig(seed=SEED, kill_worker=n - 1,
+                            kill_after_chunks=1)
+        cfg = ClusterConfig(n_workers=n, k=k, row_cost=5e-3,
+                            starvation_timeout=30.0, enable_stealing=False)
+        eng = CodedExecutionEngine(
+            cfg, TraceInjector(speeds),
+            transport=FaultyTransport(chaos, hb_interval=0.05, hb_miss=6,
+                                      dead_after=2, connect_timeout=60.0,
+                                      shm=True, shm_threshold=1024))
+        uid = eng.transport.shm_uid
+        try:
+            data = eng.load_matrix(a, chunks=chunks)
+            strat = GeneralS2C2(n, k, a.shape[0], chunks=chunks,
+                                timeout_slack=3.0)
+            for _ in range(2):
+                out = eng.matvec(data, x, strat)
+                np.testing.assert_allclose(out.y, a @ x, rtol=1e-9)
+            assert eng.registry.value("s2c2_transport_verdicts_total") >= 1.0
+            assert n - 1 in eng.dead
+            # the victim's prefix is already clean BEFORE shutdown: the
+            # permanent verdict, not the teardown, did the reclamation
+            assert SegmentPool.scan(
+                shm_prefix(uid, f"w{n - 1}_")) == []
+        finally:
+            eng.shutdown()
+        _assert_no_leak(uid)
+
+    def test_forced_conn_drop_reconnect_keeps_plane_consistent(self):
+        # a severed socket + reconnect replays unacked events; descriptor
+        # frames ride the same at-least-once path, so results stay
+        # bit-correct and nothing leaks when the session ends
+        n, k, chunks = 3, 2, 6
+        a = RNG.standard_normal((320, 64))
+        x = RNG.standard_normal(64)
+        chaos = ChaosConfig(seed=SEED + 2, drop_conn_worker=1,
+                            drop_conn_after_chunks=2)
+        cfg = ClusterConfig(n_workers=n, k=k, row_cost=5e-4,
+                            starvation_timeout=30.0)
+        eng = CodedExecutionEngine(
+            cfg, NoSlowdown(),
+            transport=FaultyTransport(chaos, hb_interval=0.05,
+                                      connect_timeout=60.0,
+                                      shm=True, shm_threshold=1024))
+        uid = eng.transport.shm_uid
+        try:
+            data = eng.load_matrix(a, chunks=chunks)
+            strat = GeneralS2C2(n, k, a.shape[0], chunks=chunks)
+            for _ in range(3):
+                out = eng.matvec(data, x, strat)
+                np.testing.assert_allclose(out.y, a @ x, rtol=1e-9)
+            assert eng.registry.value(
+                "s2c2_transport_reconnects_total") >= 1.0
+            assert not eng.dead
+        finally:
+            eng.shutdown()
+        _assert_no_leak(uid)
+
+    def test_partition_rejoin_leaves_no_segments(self):
+        # one-way partition -> SUSPECTED -> heal -> rejoin: the victim's
+        # buffered result descriptors replay on heal (credit path) and the
+        # shard-install plane revalidates on rejoin — zero segments after
+        n = k = 3
+        chunks = 2
+        victim = 1
+        a = RNG.standard_normal((96, 32))
+        xs = [RNG.standard_normal(32) for _ in range(4)]
+        strat = GeneralS2C2(n, k, a.shape[0], chunks=chunks)
+        chaos = ChaosConfig(seed=SEED, partition_worker=victim,
+                            partition_mode="events",
+                            partition_after_chunks=1,
+                            partition_duration_s=2.0)
+        eng = CodedExecutionEngine(
+            ClusterConfig(n_workers=n, k=k, row_cost=8e-3,
+                          starvation_timeout=30.0, max_reassign_waves=0,
+                          enable_stealing=False),
+            NoSlowdown(),
+            transport=FaultyTransport(chaos, hb_interval=0.05, hb_miss=4,
+                                      dead_after=2, connect_timeout=60.0,
+                                      event_silence_factor=2.0,
+                                      shm=True, shm_threshold=1024))
+        uid = eng.transport.shm_uid
+        try:
+            data = eng.load_matrix(a, chunks=chunks)
+            handles = [eng.matvec_async(data, x, strat) for x in xs]
+            outs = [h.result(timeout=60.0) for h in handles]
+            for out, x in zip(outs, xs):
+                np.testing.assert_allclose(out.y, a @ x, rtol=1e-9)
+            reg = eng.registry
+            assert reg.value("s2c2_transport_verdicts_total") >= 1.0
+            assert _wait(lambda: reg.value("s2c2_rejoins_total") >= 1.0,
+                         timeout=10.0)
+        finally:
+            eng.shutdown()
+        _assert_no_leak(uid)
+
+    def test_master_crash_recover_sweeps_orphans(self, tmp_path):
+        # crash() cannot unlink (a real dead master wouldn't): the m-side
+        # orphans stay in /dev/shm until recover() sweeps the journaled
+        # lineage prefix, then the resumed round decodes bit-identically
+        n = k = 3
+        chunks = 2
+        rng = np.random.default_rng(SEED + 11)
+        a = rng.standard_normal((48, 24))
+        x = rng.standard_normal(24)
+        speeds = np.array([[0.08, 1.0, 1.0]])
+        strat = GeneralS2C2(n, k, a.shape[0], chunks=chunks)
+        cfg = ClusterConfig(n_workers=n, k=k, row_cost=5e-3,
+                            starvation_timeout=20.0,
+                            journal_dir=str(tmp_path))
+        eng = CodedExecutionEngine(
+            cfg, TraceInjector(speeds),
+            transport=_proc_transport(shm=True, shm_threshold=1024))
+        uid = eng.transport.shm_uid
+        eng2 = None
+        try:
+            data = eng.load_matrix(a, chunks=chunks)
+            h1 = eng.matvec_async(data, x, strat)
+            assert _wait(lambda: eng.registry.value(
+                "s2c2_journal_records_total") >= 3 + 4)
+            procs = eng.transport.procs
+            eng.crash()
+            with pytest.raises(EngineClosed):
+                h1.result(timeout=10.0)
+
+            eng2 = CodedExecutionEngine.recover(
+                cfg, TraceInjector(speeds),
+                transport=_proc_transport(connect_timeout=30.0, shm=True,
+                                          shm_threshold=1024),
+                procs=procs)
+            # the lineage id survived the crash via the journal meta
+            # record, so the orphan sweep hit the right prefix
+            assert eng2.transport.shm_uid == uid
+            assert SegmentPool.scan(shm_prefix(uid, "m")) == []
+            (handle,) = eng2.recovered.values()
+            out = handle.result(timeout=60.0)
+            np.testing.assert_allclose(out.y, a @ x, rtol=1e-9)
+        finally:
+            eng.shutdown()
+            if eng2 is not None:
+                eng2.shutdown()
+        _assert_no_leak(uid)
+
+
+# ---------------------------------------------------------------------------
+# journal compaction (satellite)
+# ---------------------------------------------------------------------------
+
+class TestJournalCompaction:
+    def _seed_journal(self, tmp_path, rounds=6, retired=4):
+        j = RoundJournal(str(tmp_path), fsync_every=1)
+        res = np.arange(64, dtype=np.float64)
+        j.append_record("meta", {"port": 1, "epoch": 1})
+        j.append_record("install", {"shard_id": "t1", "n": 3, "k": 2})
+        for rid in range(1, rounds + 1):
+            j.append_record("plan", {"rid": rid, "shard_id": "t1"})
+            j.append_record("ack", {"rid": rid, "chunk": 0, "worker": 0,
+                                    "result": encode_array(res)})
+            if rid <= retired:
+                j.append_record("retire", {"rid": rid})
+        j.append_record("admit", {"uid": "j1", "job": {}})
+        j.append_record("job_done", {"uid": "j1"})
+        j.append_record("admit", {"uid": "j2", "job": {}})
+        return j
+
+    def test_compacted_replay_resumes_identically(self, tmp_path):
+        j = self._seed_journal(tmp_path)
+        full = RoundJournal.replay(str(tmp_path))
+        stats = j.compact()
+        assert stats["pruned_records"] > 0
+        assert stats["bytes_reclaimed"] > 0
+        compacted = RoundJournal.replay(str(tmp_path))
+        j.close()
+        # everything recovery consumes is unchanged: open rounds, their
+        # ack floors, the install set, open jobs, and the round-id floor
+        assert set(compacted.open_rounds) == set(full.open_rounds)
+        assert set(compacted.installs) == set(full.installs)
+        assert set(compacted.open_jobs) == set(full.open_jobs)
+        assert compacted.round_floor == full.round_floor == 6
+        for rid in compacted.open_rounds:
+            assert set(compacted.acks[rid]) == set(full.acks[rid])
+        # and the retired rounds' payloads are actually gone
+        assert all(rid not in compacted.acks for rid in range(1, 5))
+        assert compacted.checkpoint is not None
+        assert compacted.checkpoint["retired_rounds"] == 4
+
+    def test_floor_survives_full_retirement(self, tmp_path):
+        # every round retired: without the checkpoint floor a recovered
+        # master would re-number from 0 and collide with stale replays
+        j = self._seed_journal(tmp_path, rounds=5, retired=5)
+        j.compact()
+        st = RoundJournal.replay(str(tmp_path))
+        assert st.open_rounds == {} and st.round_floor == 5
+        # a second compaction keeps the floor through the new checkpoint
+        j.compact()
+        j.close()
+        st2 = RoundJournal.replay(str(tmp_path))
+        assert st2.round_floor == 5
+
+    def test_compaction_bounds_journal_size(self, tmp_path):
+        j = self._seed_journal(tmp_path, rounds=40, retired=40)
+        before = os.path.getsize(j.path)
+        j.compact()
+        after = os.path.getsize(j.path)
+        j.close()
+        # 40 retired rounds of ack payloads collapse to a checkpoint +
+        # meta + install + the open admit
+        assert after < before / 4
+
+    def test_engine_hook_compacts_every_n_retires(self, tmp_path):
+        n, k, chunks = 3, 2, 2
+        a = RNG.standard_normal((32, 16))
+        xs = [RNG.standard_normal(16) for _ in range(3)]
+        strat = GeneralS2C2(n, k, a.shape[0], chunks=chunks)
+        cfg = ClusterConfig(n_workers=n, k=k, row_cost=1e-4,
+                            journal_dir=str(tmp_path),
+                            journal_compact_every=1)
+        eng = CodedExecutionEngine(cfg, NoSlowdown())
+        try:
+            data = eng.load_matrix(a, chunks=chunks)
+            for x in xs:
+                out = eng.matvec(data, x, strat)
+                np.testing.assert_allclose(out.y, a @ x, rtol=1e-9)
+            assert eng.registry.value(
+                "s2c2_journal_compactions_total") >= 3.0
+            assert eng.registry.value(
+                "s2c2_journal_reclaimed_bytes_total") > 0.0
+        finally:
+            eng.shutdown()
+        st = RoundJournal.replay(str(tmp_path))
+        assert st.open_rounds == {}
+        assert st.round_floor == 3      # floors survive the pruning
